@@ -1,0 +1,150 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Runs FedEPM / SFedAvg / SFedProx on the (synthetic) Adult-income logistic
+regression task to the paper's stopping rule and reports the paper's five
+factors: (f(w)/m, CR, TCT, LCT, SNR). See Sec. VII.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_logreg import termination_reached
+from repro.core import baselines, fedepm
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+
+_CACHE: dict = {}
+
+
+def get_task(m: int, d: int = 45222, n: int = 14, seed: int = 0):
+    key = (m, d, n, seed)
+    if key not in _CACHE:
+        X, y = synth.adult_like(d=d, n=n, seed=seed)
+        batches = jax.tree_util.tree_map(
+            jnp.asarray, partition_iid(X, y, m=m, seed=seed))
+        _CACHE[key] = (X, y, batches)
+    return _CACHE[key]
+
+
+def run_algorithm(alg: str, *, m: int, k0: int, rho: float, eps: float,
+                  seed: int = 0, max_rounds: int = 400, d: int = 45222,
+                  ens_impl: str = "ref"):
+    """Returns dict(f, CR, TCT, LCT, SNR, rounds). One trial."""
+    X, y, batches = get_task(m, d=d)
+    n = X.shape[1]
+    loss = make_logistic_loss()
+
+    if alg == "fedepm":
+        cfg = fedepm.FedEPMConfig.paper_defaults(
+            m=m, rho=rho, k0=k0, eps_dp=eps, ens_impl=ens_impl)
+        state = fedepm.init_state(jax.random.PRNGKey(seed), jnp.zeros(n),
+                                  cfg)
+        step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    else:
+        cfg = baselines.BaselineConfig(m=m, k0=k0, rho=rho, eps_dp=eps)
+        state = baselines.init_state(jax.random.PRNGKey(seed), jnp.zeros(n),
+                                     cfg)
+        rnd = baselines.sfedavg_round if alg == "sfedavg" \
+            else baselines.sfedprox_round
+        step = jax.jit(lambda s: rnd(s, batches, loss, cfg))
+
+    fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
+    gsq = jax.jit(lambda w: fedepm.global_grad_sq_norm(loss, w, batches))
+
+    # warm up compile outside the timed region
+    state_w, _ = step(state)
+    jax.block_until_ready(state_w.w_tau)
+
+    f_hist = []
+    snr_last = np.inf
+    snr_fixed = np.inf       # SNR at a FIXED round (20): isolates the
+    t0 = time.perf_counter()  # eps -> noise effect from termination time
+    rounds = 0
+    for r in range(max_rounds):
+        state, metrics = step(state)
+        rounds += 1
+        f_hist.append(float(fobj(state.w_tau)))
+        snr = float(metrics.snr)
+        if np.isfinite(snr):
+            snr_last = snr
+            if r <= 20:
+                snr_fixed = snr
+        if termination_reached(f_hist, float(gsq(state.w_tau)), n):
+            break
+    jax.block_until_ready(state.w_tau)
+    tct = time.perf_counter() - t0
+
+    lct = measure_lct(alg, m=m, k0=k0, rho=rho, eps=eps, d=d, seed=seed)
+    return {"alg": alg, "m": m, "k0": k0, "rho": rho, "eps": eps,
+            "f": f_hist[-1] / m, "CR": rounds, "TCT": tct, "LCT": lct,
+            "SNR": snr_last, "SNR20": snr_fixed, "f_hist": f_hist}
+
+
+def measure_lct(alg: str, *, m: int, k0: int, rho: float, eps: float,
+                d: int = 45222, seed: int = 0, reps: int = 5) -> float:
+    """Local computation time: what ONE client computes between two
+    communications (k0 inner iterations), excluding aggregation/transport.
+    FedEPM: one gradient + k0 closed-form prox steps; SFedAvg: k0 gradient
+    steps; SFedProx: k0 * ell proximal GD steps (Alg. 4)."""
+    X, y, batches = get_task(m, d=d)
+    n = X.shape[1]
+    loss = make_logistic_loss()
+    b0 = jax.tree_util.tree_map(lambda x: x[0], batches)
+    w = jnp.zeros(n)
+    grad = jax.grad(loss)
+
+    if alg == "fedepm":
+        cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0,
+                                                 eps_dp=eps)
+
+        def local(w_tau, wi):
+            g = grad(w_tau, b0)
+            wi, mu = fedepm._client_inner(wi, w_tau, g, jnp.asarray(0), cfg)
+            return wi
+    elif alg == "sfedavg":
+        def local(w_tau, wi):
+            def stp(wc, t):
+                gamma = 2.0 / jnp.sqrt(2.0 * k0 + 1.0)
+                base = jnp.where(t == 0, w_tau, wc)
+                return base - gamma * grad(base, b0), None
+            wi, _ = jax.lax.scan(stp, wi, jnp.arange(k0))
+            return wi
+    else:
+        def local(w_tau, wi):
+            def outer(wc, t):
+                v = jnp.where(t == 0, w_tau, wc)
+
+                def inner(vt, _):
+                    gamma = 2.0 / jnp.sqrt(2.0 * k0 + 1.0)
+                    return vt - gamma * (grad(vt, b0)
+                                         + 1e-5 * (vt - w_tau)), None
+
+                v, _ = jax.lax.scan(inner, v, jnp.arange(3))
+                return v, None
+            wi, _ = jax.lax.scan(outer, wi, jnp.arange(k0))
+            return wi
+
+    jlocal = jax.jit(local)
+    out = jlocal(w, w)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(max(reps, 10)):
+        t0 = time.perf_counter()
+        out = jlocal(w, w)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))  # robust to scheduler jitter
+
+
+def average_trials(alg, trials=3, **kw):
+    runs = [run_algorithm(alg, seed=s, **kw) for s in range(trials)]
+    out = dict(runs[0])
+    for k in ("f", "CR", "TCT", "LCT", "SNR"):
+        out[k] = float(np.mean([r[k] for r in runs]))
+    out.pop("f_hist", None)
+    return out

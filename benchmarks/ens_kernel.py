@@ -1,0 +1,55 @@
+"""ENS kernel micro-benchmark: jnp reference (XLA sort) vs the literal
+paper Algorithm 1 vs the Pallas kernel (interpret mode on CPU -- the
+timing of interest on this host is ref-vs-paper; the Pallas number is a
+correctness checkpoint, its TPU performance is structural, see
+EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ens import ops, ref
+
+
+def _time(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(m=32, n=1 << 16, lam=0.5, eta=1.0):
+    key = jax.random.PRNGKey(0)
+    Z = jax.random.normal(key, (m, n))
+    rows = []
+    f_ref = jax.jit(lambda z: ref.ens_ref(z, lam, eta))
+    f_pap = jax.jit(lambda z: ref.ens_paper(z, lam, eta))
+    t_ref = _time(f_ref, Z)
+    t_pap = _time(f_pap, Z)
+    rows.append((f"ens/ref_m{m}_n{n}", t_ref * 1e6, "median-identity"))
+    rows.append((f"ens/paper_alg1_m{m}_n{n}", t_pap * 1e6,
+                 "literal Algorithm 1"))
+    # pallas interpret: correctness + (slow) interpreted timing
+    w_pal = ops.ens(Z, lam, eta, impl="pallas", interpret=True)
+    w_ref = f_ref(Z)
+    err = float(jnp.max(jnp.abs(w_pal - w_ref)))
+    rows.append((f"ens/pallas_interpret_allclose", 0.0, f"maxerr={err:.2e}"))
+    # objective comparison ref vs paper algorithm (documented deviation)
+    obj_ref = float(jnp.sum(ref.ens_objective(Z, w_ref, lam, eta)))
+    w_pap_v = f_pap(Z)
+    obj_pap = float(jnp.sum(ref.ens_objective(Z, w_pap_v, lam, eta)))
+    rows.append(("ens/objective_ref_vs_paper", 0.0,
+                 f"ref={obj_ref:.4f};paper={obj_pap:.4f};"
+                 f"ref_leq={obj_ref <= obj_pap + 1e-3}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

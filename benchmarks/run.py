@@ -1,0 +1,68 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows.
+
+Full grids take tens of minutes on this CPU host; the default profile is
+a reduced-but-faithful grid (documented per module). Pass --full for the
+paper's complete grids, --quick for CI-speed smoke values.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small-d task, minimal grids (smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="the paper's complete grids (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (fig2,fig3,...)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ens_kernel, fig2_accuracy, fig3_k0, fig4_rho,
+                            fig5_privacy, table1_lct)
+
+    d = 4000 if args.quick else 45222
+    trials = 1 if args.quick else (3 if not args.full else 10)
+    k0_grid = (4, 12, 20) if not args.full else (4, 8, 12, 16, 20)
+
+    jobs = {
+        "fig2": lambda: fig2_accuracy.run(d=d),
+        "fig3": lambda: fig3_k0.run(d=d, k0_grid=k0_grid),
+        "table1": lambda: table1_lct.run(
+            d=d, k0_grid=(4, 8, 12, 16, 20)),
+        "fig4": lambda: fig4_rho.run(
+            d=d, trials=trials,
+            rho_grid=(0.2, 0.6, 1.0) if not args.full
+            else (0.2, 0.4, 0.6, 0.8, 1.0)),
+        "fig5": lambda: fig5_privacy.run(
+            d=d, trials=trials,
+            eps_grid=(0.1, 0.5, 0.9) if not args.full
+            else (0.1, 0.3, 0.5, 0.7, 0.9)),
+        "ens": lambda: ens_kernel.run(
+            n=(1 << 12) if args.quick else (1 << 16)),
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        jobs = {k: v for k, v in jobs.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    for name, job in jobs.items():
+        t0 = time.time()
+        try:
+            for row in job():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    print(f"# all benchmarks done in {time.time()-t_all:.1f}s",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Paper reproduction driver: the three algorithms (FedEPM, SFedAvg,
+SFedProx) head-to-head with the paper's stopping rule, reporting the five
+factors (f(w)/m, CR, TCT, LCT, SNR) of Sec. VII.C.
+
+    PYTHONPATH=src python examples/paper_repro.py [--d 45222] [--m 50]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, ".")  # for `benchmarks` when run from repo root
+
+from benchmarks.common import run_algorithm  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=20000,
+                    help="instances (paper: 45222)")
+    ap.add_argument("--m", type=int, default=50)
+    ap.add_argument("--k0", type=int, default=12)
+    ap.add_argument("--rho", type=float, default=0.5)
+    ap.add_argument("--eps", type=float, default=0.1)
+    args = ap.parse_args()
+
+    print(f"task: adult-like d={args.d}, m={args.m}, k0={args.k0}, "
+          f"rho={args.rho}, eps={args.eps}\n")
+    print(f"{'alg':10s} {'f(w)/m':>10s} {'CR':>5s} {'TCT(s)':>8s} "
+          f"{'LCT(ms)':>9s} {'SNR':>7s}")
+    for alg in ("fedepm", "sfedavg", "sfedprox"):
+        r = run_algorithm(alg, m=args.m, k0=args.k0, rho=args.rho,
+                          eps=args.eps, d=args.d)
+        print(f"{alg:10s} {r['f']:10.5f} {r['CR']:5d} {r['TCT']:8.2f} "
+              f"{r['LCT']*1e3:9.3f} {r['SNR']:7.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: FedEPM in ~40 lines on the paper's logistic-regression task.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedepm
+from repro.core.tasks import accuracy_logistic, make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+
+
+def main():
+    # 1. data: synthetic Adult-income stand-in, dealt to m clients
+    m = 50
+    X, y = synth.adult_like(d=20000, n=14, seed=0)
+    batches = jax.tree_util.tree_map(
+        jnp.asarray, partition_iid(X, y, m=m, seed=0))
+    loss = make_logistic_loss()
+
+    # 2. the paper's hyper-parameters (Sec. VII.B)
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=0.5, k0=12,
+                                             eps_dp=0.1)
+    state = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(14), cfg)
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+
+    # 3. train: each round = ENS aggregation + 1 gradient/client + k0
+    #    closed-form prox steps + DP-noised upload
+    for r in range(40):
+        state, metrics = step(state)
+        if r % 5 == 0:
+            f = float(fedepm.global_objective(loss, state.w_tau, batches))
+            acc = float(accuracy_logistic(state.w_tau, jnp.asarray(X),
+                                          jnp.asarray(y)))
+            print(f"round {r:3d}  f(w)/m={f/m:.5f}  acc={acc:.3f}  "
+                  f"SNR={float(metrics.snr):.2f}  "
+                  f"selected={int(metrics.selected.sum())}/{m}")
+
+    acc = float(accuracy_logistic(state.w_tau, jnp.asarray(X),
+                                  jnp.asarray(y)))
+    f = float(fedepm.global_objective(loss, state.w_tau, batches)) / m
+    print(f"\nfinal f(w)/m={f:.5f} (regularised optimum ~0.6918), "
+          f"accuracy={acc:.3f} (optimum ~0.74), eps-DP eps={cfg.eps_dp}")
+    assert f < 0.6925 and acc > 0.70
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""End-to-end driver: train a ~135M-parameter LM (smollm-135m, full
+config by default) with FedEPM as the federated optimizer for a few
+hundred communication rounds on synthetic token streams.
+
+On this CPU container the default uses the REDUCED smollm config with a
+small batch so a full run finishes in minutes; pass --full-config on a
+real host for the 135M model (and --rounds 300 for the few-hundred-step
+run the deliverable describes).
+
+    PYTHONPATH=src python examples/train_smollm_fedepm.py --rounds 40
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.checkpoint import save
+from repro.core import fedepm
+from repro.core.tasks import make_lm_loss
+from repro.data.lm import federated_token_batches
+from repro.models import registry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--m", type=int, default=4, help="clients")
+    ap.add_argument("--batch", type=int, default=4, help="seqs per client")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--k0", type=int, default=4)
+    ap.add_argument("--eps", type=float, default=0.5)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the real 135M config (needs a big host)")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = (configs.get_config("smollm-135m") if args.full_config
+           else configs.get_reduced("smollm-135m"))
+    model = registry.get_model(cfg)
+    loss = make_lm_loss(model.apply)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))))
+    print(f"arch=smollm-135m ({'full' if args.full_config else 'reduced'}) "
+          f"params={n_params/1e6:.1f}M  m={args.m} k0={args.k0}")
+
+    # LM-scale FedEPM hyper-parameters (the paper's were tuned for n=14
+    # logistic regression): mu0 acts as an INVERSE learning rate (the
+    # prox step is ~ -g/mu), so mu0=0.05 means lr=20 -> divergence on an
+    # LM; mu0=20 (lr=0.05) trains. sensitivity_clip caps the paper's
+    # Delta_hat = 2||g||_1 surrogate, which otherwise scales with the
+    # parameter count and overflows fp32.
+    fcfg = fedepm.FedEPMConfig.paper_defaults(
+        m=args.m, rho=0.5, k0=args.k0, eps_dp=args.eps,
+        mu0=20.0, sensitivity_clip=1.0)
+    params0 = model.init(jax.random.PRNGKey(0))
+    state = fedepm.init_state(jax.random.PRNGKey(1), params0, fcfg)
+    step = jax.jit(lambda s, b: fedepm.fedepm_round(s, b, loss, fcfg))
+
+    stream = federated_token_batches(cfg.vocab, args.m, args.batch,
+                                     args.seq, steps=args.rounds, seed=0)
+    t0 = time.time()
+    first_loss = None
+    for r, raw in enumerate(stream):
+        batch = jax.tree_util.tree_map(jnp.asarray, raw)
+        state, metrics = step(state, batch)
+        if r % 5 == 0 or r == args.rounds - 1:
+            f = float(fedepm.global_objective(loss, state.w_tau, batch))
+            f /= args.m
+            if first_loss is None:
+                first_loss = f
+            print(f"round {r:4d}  loss={f:.4f}  SNR={float(metrics.snr):.2f}"
+                  f"  drift={float(metrics.drift):.3e}  "
+                  f"({time.time()-t0:.1f}s)")
+    print(f"\nloss: {first_loss:.4f} -> {f:.4f} "
+          f"({(1 - f/first_loss)*100:.1f}% reduction)")
+    if args.checkpoint:
+        save(args.checkpoint, state.w_tau,
+             {"arch": cfg.name, "rounds": args.rounds})
+        print("checkpointed aggregate model to", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.npz import save, restore, save_fedepm, restore_fedepm  # noqa: F401

@@ -1,0 +1,77 @@
+"""Differential-privacy machinery (paper Sec. V, Setup V.1, eq. (39)).
+
+Noise model: i.i.d. Laplace perturbation of the uploaded parameters,
+z_i = w_i + eps_i. The paper's density convention (25) is
+d(e) = 1/(2 nu) exp(-|e| / (2 nu)), i.e. a standard Laplace with *scale
+b = 2 nu*. Setup V.1 picks nu = Delta_i / (eps_dp * mu_{i,k+1}) and the
+experiments bound the l1 gradient sensitivity by the surrogate
+Delta_hat = 2 ||g_i^tau||_1 (their eq. (39), since the true Delta is hard to
+compute). We therefore sample Laplace(0, b) with
+
+    b = 2 * Delta_hat / (eps_dp * mu_{i,k+1})
+
+which matches the paper's effective distribution. Because mu_{i,k} grows
+geometrically (alpha_i^k), the injected noise decays geometrically -- the
+property both the DP guarantee (per-round eps-DP, Thm V.1) and the
+convergence proof (Thm VI.1, phi_{i,k} summable) rely on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.treeutil import tmap, tree_l1_norm, tree_sq_norm
+
+
+def sample_laplace(key: jax.Array, shape, scale, dtype=jnp.float32) -> jax.Array:
+    """Laplace(0, scale) via inverse CDF; scale may be a traced scalar."""
+    u = jax.random.uniform(key, shape, dtype=jnp.float32,
+                           minval=-0.5 + 1e-7, maxval=0.5)
+    eps = -jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
+    return (scale * eps).astype(dtype)
+
+
+def laplace_tree(key: jax.Array, tree, scale):
+    """Sample a Laplace-noise pytree shaped like ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noise = [
+        sample_laplace(k, leaf.shape, scale, dtype=leaf.dtype)
+        for k, leaf in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
+def sensitivity_surrogate(g_tree) -> jax.Array:
+    """Delta_hat = 2 ||g||_1 (paper eq. (39) commentary)."""
+    return 2.0 * tree_l1_norm(g_tree)
+
+
+def fedepm_noise_scale(delta_hat, eps_dp, mu, factor: float = 1.0) -> jax.Array:
+    """Laplace scale b = factor * Delta_hat / (eps_dp * mu).
+
+    ``factor=1`` reads the paper's "Lap(0, nu)" with the *standard* scale
+    convention (b = nu). The paper's own density (25) and moments (59) are
+    mutually inconsistent (their (25) integrates to 2; their E|eps| = 4 nu
+    corresponds to b = 4 nu); factor lets benchmarks reproduce either
+    convention. The DP guarantee of Thm V.1 holds for factor >= 2 exactly,
+    and for factor = 1 with eps' = 2*eps.
+    """
+    return factor * delta_hat / (eps_dp * mu)
+
+
+def snr_db10(w_tree, eps_tree) -> jax.Array:
+    """Paper's SNR for one client: log10(||w|| / ||eps||)."""
+    wn = jnp.sqrt(tree_sq_norm(w_tree))
+    en = jnp.sqrt(tree_sq_norm(eps_tree))
+    return jnp.log10(wn / jnp.maximum(en, 1e-30))
+
+
+def clip_tree_l1(tree, max_l1):
+    """Optional l1 clipping to *enforce* a sensitivity bound (beyond-paper
+
+    hardening: the paper assumes Delta is bounded; clipping makes it true).
+    """
+    n1 = tree_l1_norm(tree)
+    factor = jnp.minimum(1.0, max_l1 / jnp.maximum(n1, 1e-30))
+    return tmap(lambda x: x * factor, tree)

@@ -1,0 +1,72 @@
+"""Partial-device participation schedules (paper Sec. IV.C, Setup VI.1).
+
+Two samplers:
+
+``sample_uniform``  -- the paper's experimental scheme: each round select
+    |S| = rho*m clients uniformly without replacement (Remark VI.1 shows the
+    coverage condition then holds w.h.p.).
+``sample_coverage`` -- a deterministic-coverage scheme that *guarantees*
+    Setup VI.1/(29): rounds are grouped into windows of s0; within a window a
+    random permutation of [m] is dealt out round-robin, so every client is
+    selected at least once per window (max selection gap < 2*s0, eq. (30)).
+
+Both return a boolean mask of shape (m,) and are jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_uniform(key: jax.Array, m: int, rho: float) -> jax.Array:
+    """|S| = max(1, round(rho*m)) clients uniformly without replacement."""
+    n_sel = max(1, int(round(rho * m)))
+    perm = jax.random.permutation(key, m)
+    mask = jnp.zeros((m,), dtype=bool).at[perm[:n_sel]].set(True)
+    return mask
+
+
+def sample_coverage(key: jax.Array, m: int, rho: float, round_idx,
+                    s0: int) -> jax.Array:
+    """Coverage-guaranteed sampler satisfying Setup VI.1.
+
+    Window w = round_idx // s0; position p = round_idx % s0. A permutation
+    seeded by (key, w) is split into s0 contiguous chunks; round p gets chunk
+    p (size >= ceil(m/s0)) padded up to |S| = rho*m with uniform extras.
+    """
+    n_sel = max(1, int(round(rho * m)))
+    chunk = -(-m // s0)  # ceil
+    if chunk > n_sel:
+        raise ValueError(
+            f"coverage sampler needs rho*m >= ceil(m/s0); got |S|={n_sel}, "
+            f"ceil(m/s0)={chunk}"
+        )
+    window = round_idx // s0
+    pos = round_idx % s0
+    wkey = jax.random.fold_in(key, window)
+    perm = jax.random.permutation(wkey, m)
+    # mandatory chunk for this round (cyclic so the last chunk is full)
+    start = (pos * chunk) % m
+    idx = (start + jnp.arange(chunk)) % m
+    mask = jnp.zeros((m,), dtype=bool).at[perm[idx]].set(True)
+    # top up with uniform extras to reach n_sel
+    ekey = jax.random.fold_in(wkey, pos + 1)
+    scores = jax.random.uniform(ekey, (m,))
+    scores = jnp.where(mask, 2.0, scores)  # already-chosen rank first
+    order = jnp.argsort(-scores)
+    mask = jnp.zeros((m,), dtype=bool).at[order[:n_sel]].set(True)
+    return mask
+
+
+def max_selection_gap(masks: jax.Array) -> jax.Array:
+    """Diagnostic for eq. (30): masks (T, m) -> max gap u - v between
+    CONSECUTIVE selections of any client (first selection measured from
+    the start, t = -1)."""
+    T, m = masks.shape
+    t = jnp.arange(T)[:, None]
+    latest = jnp.where(masks, t, -1)
+    latest = jax.lax.associative_scan(jnp.maximum, latest, axis=0)
+    prev = jnp.concatenate(
+        [jnp.full((1, m), -1, latest.dtype), latest[:-1]], axis=0)
+    gap_at_sel = jnp.where(masks, t - prev, 0)
+    return jnp.max(gap_at_sel)

@@ -1,0 +1,73 @@
+"""Small pytree helpers used across the federated core."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+def tree_add(a, b):
+    return tmap(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tmap(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return tmap(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return tmap(jnp.zeros_like, a)
+
+
+def tree_sq_norm(a):
+    """||a||^2 summed over all leaves (float32)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_l1_norm(a):
+    leaves = jax.tree_util.tree_leaves(a)
+    return sum(jnp.sum(jnp.abs(x.astype(jnp.float32))) for x in leaves)
+
+
+def tree_inf_norm(a):
+    leaves = jax.tree_util.tree_leaves(a)
+    return jnp.max(jnp.stack([jnp.max(jnp.abs(x)) for x in leaves]))
+
+
+def tree_size(a) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return tmap(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree, i):
+    """tree[i] along the leading axis of every leaf."""
+    return tmap(lambda x: x[i], tree)
+
+
+def tree_where(mask_scalar, a, b):
+    """Select a or b per-leaf given a scalar/bool (broadcast) mask."""
+    return tmap(lambda x, y: jnp.where(mask_scalar, x, y), a, b)
+
+
+def tree_where_client(mask_m, a, b):
+    """Select between stacked client trees with a per-client (m,) mask."""
+
+    def sel(x, y):
+        m = mask_m.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(m, x, y)
+
+    return tmap(sel, a, b)
+
+
+def tree_broadcast_clients(tree, m: int):
+    """Tile a tree along a new leading client axis of size m."""
+    return tmap(lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)

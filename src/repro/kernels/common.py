@@ -1,0 +1,38 @@
+"""Shared helpers for Pallas kernels: padding, blocking, interpret policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Run kernels in interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int, value) -> jax.Array:
+    """Pad ``axis`` of x up to the next multiple of ``multiple`` with ``value``."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def as_2d_blocks(flat: jax.Array, cols: int):
+    """Reshape a 1-D array to (rows, cols), padding with zeros.
+
+    Returns (blocked, original_size).
+    """
+    n = flat.shape[0]
+    padded = pad_axis(flat, 0, cols, 0)
+    return padded.reshape(-1, cols), n
+
+
+def next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the Elastic-Net Solver (ENS), paper Algorithm 1.
+
+TPU adaptation (see DESIGN.md §2): the paper's per-coordinate *data-dependent
+sort* of the m client values is replaced by a **bitonic sorting network** over
+a padded power-of-two axis -- a fixed schedule of log^2(P) vectorised
+compare-exchange passes with no divergence, executed on the VPU. Using the
+median identity (kernels/ens/ref.py) the whole ENS reduces to: build the
+2m+1 candidate rows, sort, take the middle row.
+
+Tiling: the coordinate axis n is tiled into ``block_n``-wide VMEM blocks
+(lane-aligned, multiples of 128); the client axis m stays whole inside the
+block since m is small (#client groups on the mesh). VMEM working set per
+block is P * block_n * 4 bytes with P = next_pow2(2m+1) -- e.g. m=32,
+block_n=512 -> 128 KiB, far under the ~16 MiB/core VMEM budget, leaving room
+for double buffering of the input stream from HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret, next_pow2, pad_axis
+
+_NEG = -3.0e38  # sentinels well outside any fp32 parameter value
+_POS = 3.0e38
+
+
+def _bitonic_sort_axis0(x: jax.Array, P: int) -> jax.Array:
+    """Sort (P, B) ascending along axis 0 with a static bitonic network."""
+    k = 2
+    while k <= P:
+        j = k // 2
+        while j >= 1:
+            y = x.reshape(P // (2 * j), 2, j, -1)
+            lo, hi = y[:, 0], y[:, 1]
+            mn = jnp.minimum(lo, hi)
+            mx = jnp.maximum(lo, hi)
+            # row index of the pair's low element is a*2j (+c); bit k of it
+            # only depends on the block index a because 2j <= k.
+            a = lax.broadcasted_iota(jnp.int32, (P // (2 * j), 1, 1), 0)
+            asc = (a * (2 * j)) & k == 0
+            new_lo = jnp.where(asc, mn, mx)
+            new_hi = jnp.where(asc, mx, mn)
+            x = jnp.stack([new_lo, new_hi], axis=1).reshape(P, -1)
+            j //= 2
+        k *= 2
+    return x
+
+
+def _ens_kernel(z_ref, offs_ref, o_ref, *, m: int, P: int, med_idx: int,
+                q_lo: int, q_hi: int):
+    z = z_ref[...].astype(jnp.float32)  # (m, B)
+    offs = offs_ref[...].astype(jnp.float32)  # (m+1, 1)
+    B = z.shape[1]
+    mean = jnp.mean(z, axis=0, keepdims=True)  # (1, B)
+    cands = mean + offs  # (m+1, B)
+    parts = [z, cands]
+    if q_lo:
+        parts.append(jnp.full((q_lo, B), _NEG, dtype=jnp.float32))
+    if q_hi:
+        parts.append(jnp.full((q_hi, B), _POS, dtype=jnp.float32))
+    x = jnp.concatenate(parts, axis=0)  # (P, B)
+    x = _bitonic_sort_axis0(x, P)
+    o_ref[...] = x[med_idx][None, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _ens_call(Z: jax.Array, offs: jax.Array, *, block_n: int, interpret: bool):
+    m, n = Z.shape
+    C = 2 * m + 1
+    P = next_pow2(C)
+    q = P - C
+    q_lo, q_hi = q // 2, q - q // 2
+    med_idx = m + q_lo
+
+    Zp = pad_axis(Z, 1, block_n, 0)
+    np_ = Zp.shape[1]
+    grid = (np_ // block_n,)
+    out = pl.pallas_call(
+        functools.partial(
+            _ens_kernel, m=m, P=P, med_idx=med_idx, q_lo=q_lo, q_hi=q_hi
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, block_n), lambda i: (0, i)),
+            pl.BlockSpec((m + 1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), Z.dtype),
+        interpret=interpret,
+    )(Zp, offs)
+    return out[0, :n]
+
+
+def ens_offsets(m: int, lam, eta, dtype=jnp.float32) -> jax.Array:
+    """The m+1 interior candidate offsets (lam/eta)*(2a-m)/m, shape (m+1, 1)."""
+    a = jnp.arange(m + 1, dtype=dtype)
+    return ((lam / eta) * (2.0 * a - m) / m).reshape(m + 1, 1)
+
+
+def ens_pallas(Z: jax.Array, lam, eta, *, block_n: int = 512,
+               interpret: bool | None = None) -> jax.Array:
+    """ENS over Z (m, n) -> (n,) via the Pallas kernel."""
+    if Z.ndim != 2:
+        raise ValueError(f"ens_pallas expects (m, n); got {Z.shape}")
+    if interpret is None:
+        interpret = default_interpret()
+    offs = ens_offsets(Z.shape[0], lam, eta, dtype=jnp.float32)
+    return _ens_call(Z, offs, block_n=block_n, interpret=interpret)

@@ -1,0 +1,67 @@
+"""Public jit'd entry points for ENS with kernel/reference dispatch.
+
+``ens(Z, lam, eta)``        -- (m, n) -> (n,), picks Pallas kernel or jnp ref.
+``ens_tree(tree, lam, eta)`` -- leaf-wise over a pytree with leading client axis.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+from repro.kernels.ens import ref as _ref
+from repro.kernels.ens.ens import ens_pallas
+
+Impl = Literal["pallas", "ref", "oracle"]
+
+# leaves above this many elements are processed in lax.map chunks over
+# their axis-1 (the stacked-layer axis), so the (2m+1)-stacked sort
+# buffer of a 30 GB MoE leaf never materialises at once (it also
+# SERIALISES the per-chunk sorts -- without it the scheduler overlaps
+# every leaf's sort and the transient peak is sum-of-leaves)
+_CHUNK_THRESHOLD = 1 << 24
+
+
+def _ens_ref_chunked(z, lam, eta):
+    import jax.numpy as jnp
+    from jax import lax
+
+    if z.size <= _CHUNK_THRESHOLD or z.ndim < 2 or z.shape[1] < 2:
+        return _ref.ens_ref(z, lam, eta)
+    zs = jnp.moveaxis(z, 1, 0)  # (L, m, ...)
+    out = lax.map(lambda zl: _ref.ens_ref(zl, lam, eta), zs)
+    return out  # (L, ...) == the leaf layout with the client axis removed
+
+
+def ens(Z: jax.Array, lam, eta, *, impl: Impl = "pallas",
+        block_n: int = 512, interpret: bool | None = None) -> jax.Array:
+    if impl == "pallas":
+        return ens_pallas(Z, lam, eta, block_n=block_n, interpret=interpret)
+    if impl == "ref":
+        return _ref.ens_ref(Z, lam, eta)
+    if impl == "oracle":
+        return _ref.ens_oracle(Z, lam, eta)
+    raise ValueError(f"unknown ENS impl {impl!r}")
+
+
+def ens_tree(tree_Z, lam, eta, *, impl: Impl = "ref", block_n: int = 512,
+             interpret: bool | None = None):
+    """Leaf-wise ENS. Each leaf (m, ...) -> (...). Coordinate-wise, so exact.
+
+    The "ref" path sorts along axis 0 WITHOUT flattening (a (m, -1) reshape
+    of a sharded leaf is unrepresentable under SPMD and would replicate);
+    the Pallas path flattens -- it runs on local 2-D blocks (shard_map or
+    single device), where the reshape is free.
+    """
+    if impl == "ref":
+        return jax.tree_util.tree_map(
+            lambda z: _ens_ref_chunked(z, lam, eta).astype(z.dtype),
+            tree_Z)
+
+    def per_leaf(z):
+        m = z.shape[0]
+        out = ens(z.reshape(m, -1), lam, eta, impl=impl, block_n=block_n,
+                  interpret=interpret)
+        return out.reshape(z.shape[1:]).astype(z.dtype)
+
+    return jax.tree_util.tree_map(per_leaf, tree_Z)

@@ -1,0 +1,128 @@
+"""Pure-jnp oracles for the Elastic-Net Solver (ENS), paper Lemma III.1/III.2.
+
+ENS solves, coordinate-wise over j in [n],
+
+    w*_j = argmin_w  sum_{i=1..m} ( lam*|w - Z_ij| + (eta/2)*(w - Z_ij)^2 )
+
+Three implementations are provided:
+
+``ens_ref``     -- the production-quality jnp reference (median identity, see
+                   below). O(n * m log m). This is the oracle the Pallas
+                   kernel is validated against and the jnp fallback used by
+                   the distributed runtime when kernels are disabled.
+``ens_oracle``  -- brute-force argmin over the full candidate set by direct
+                   objective evaluation. O(n * m^2). Used only in tests as
+                   an independently-correct ground truth.
+``ens_paper``   -- the *literal* Algorithm 1 from the paper. NOTE: as printed,
+                   Lemma III.1 has a sign error (w(s) = mean - (lam/eta)(2s/m-1)
+                   should be mean + ...; equivalently the paper's s counts
+                   values *below* w while its selection rule sorts
+                   *descending*), and ties/edge cases (e.g. m=1) are
+                   mishandled. Kept for the reproduction-notes benchmark.
+
+The median identity
+-------------------
+The objective is strictly convex and piecewise quadratic. Zeroing the
+subgradient on the open interval with exactly ``a`` client values strictly
+above w gives the interior candidate
+
+    c_a = mean + (lam/eta) * (2a - m)/m ,     a = 0..m,
+
+valid when it really lies in its interval; otherwise the solution sits at a
+client value (knot) where the subdifferential interval covers zero. One can
+check (and tests do, against ``ens_oracle``) that the unique minimizer is the
+**median of the 2m+1 values {Z_1j..Z_mj, c_0..c_m}**:
+
+* lam -> 0: all m+1 candidates collapse onto the mean, which then holds the
+  majority of the 2m+1 slots => ENS = mean (plain FedAvg aggregation).
+* eta -> 0: the candidates fly off to +-inf in balanced numbers => ENS =
+  median of the client values, matching the paper's eq. (5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _check_2d(Z: jax.Array) -> None:
+    if Z.ndim != 2:
+        raise ValueError(f"ENS expects Z of shape (m, n); got {Z.shape}")
+
+
+def ens_candidates(Z: jax.Array, lam, eta) -> jax.Array:
+    """Stack the 2m+1 per-coordinate candidates: (2m+1, ...).
+
+    Works on ANY trailing shape -- coordinate-wise along axis 0. (No
+    flattening: under pjit a (m, ...)->(m, n) reshape of a feature-sharded
+    leaf is unrepresentable and silently REPLICATES the whole tensor.)
+    """
+    m = Z.shape[0]
+    mean = jnp.mean(Z, axis=0, keepdims=True)           # (1, ...)
+    a = jnp.arange(m + 1, dtype=Z.dtype)
+    offs = (lam / eta) * (2.0 * a - m) / m              # (m+1,)
+    offs = offs.reshape((m + 1,) + (1,) * (Z.ndim - 1))
+    cands = mean + offs                                  # (m+1, ...)
+    return jnp.concatenate([Z, cands], axis=0)
+
+
+def ens_ref(Z: jax.Array, lam, eta) -> jax.Array:
+    """ENS via the median identity. Z: (m, ...) -> (...)."""
+    stacked = ens_candidates(Z, lam, eta)  # (2m+1, ...)
+    m = Z.shape[0]
+    sorted_ = jnp.sort(stacked, axis=0)
+    return sorted_[m]  # middle of 2m+1
+
+
+def ens_objective(Z: jax.Array, w: jax.Array, lam, eta) -> jax.Array:
+    """Per-coordinate objective sum_i lam|w - Z_i| + eta/2 (w - Z_i)^2.
+
+    Z: (m, n); w: (..., n) broadcastable -> (..., n).
+    """
+    d = w[..., None, :] - Z  # (..., m, n)
+    return jnp.sum(lam * jnp.abs(d) + 0.5 * eta * d * d, axis=-2)
+
+
+def ens_oracle(Z: jax.Array, lam, eta) -> jax.Array:
+    """Brute-force: evaluate the objective at every candidate, take argmin."""
+    cands = ens_candidates(Z, lam, eta)  # (C, n)
+    obj = ens_objective(Z, cands, lam, eta)  # (C, n)
+    idx = jnp.argmin(obj, axis=0)  # (n,)
+    return jnp.take_along_axis(cands, idx[None, :], axis=0)[0]
+
+
+def ens_paper(Z: jax.Array, lam, eta) -> jax.Array:
+    """Literal Algorithm 1 from the paper (first s passing the test).
+
+    w_j(s) = mean_j - (lam/eta)(2s/m - 1), selected by
+    w_desc[s] >= w_j(s) > w_desc[s+1] with w_desc[m+1] := -inf.
+    As printed this returns non-minimizers in asymmetric/tied cases; see
+    module docstring. Implemented faithfully for the comparison benchmark.
+    """
+    _check_2d(Z)
+    m, n = Z.shape
+    desc = -jnp.sort(-Z, axis=0)  # descending, (m, n)
+    mean = jnp.mean(Z, axis=0)
+    s = jnp.arange(1, m + 1, dtype=Z.dtype)
+    ws = mean[None, :] - (lam / eta) * (2.0 * s[:, None] / m - 1.0)  # (m, n)
+    upper = desc  # w_desc[s], s = 1..m
+    lower = jnp.concatenate(
+        [desc[1:], jnp.full((1, n), -jnp.inf, dtype=Z.dtype)], axis=0
+    )  # w_desc[s+1]
+    valid = (upper >= ws) & (ws > lower)  # (m, n)
+    # first s (smallest index) passing the test, as in the paper's loop
+    first = jnp.argmax(valid, axis=0)  # (n,)
+    any_valid = jnp.any(valid, axis=0)
+    picked = jnp.take_along_axis(ws, first[None, :], axis=0)[0]
+    # the paper's loop would fall through without returning; fall back to mean
+    return jnp.where(any_valid, picked, mean)
+
+
+def ens_tree(tree_Z, lam, eta):
+    """Apply ENS leaf-wise to a pytree whose leaves have a leading client axis.
+
+    Each leaf has shape (m, ...); returns a pytree of leaves with shape (...).
+    ENS is coordinate-wise, so reshaping to (m, -1) is exact.
+    """
+
+    return jax.tree_util.tree_map(lambda zi: ens_ref(zi, lam, eta),
+                                  tree_Z)

@@ -1,0 +1,33 @@
+"""Public entry points for the fused FedEPM client update."""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+from repro.kernels.prox.prox import prox_update_pallas
+from repro.kernels.prox.ref import prox_update_ref
+
+Impl = Literal["pallas", "ref"]
+
+
+def prox_update(wi: jax.Array, wtau: jax.Array, g: jax.Array, mu, lam, eta,
+                *, impl: Impl = "pallas", block_r: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    if impl == "pallas":
+        return prox_update_pallas(wi, wtau, g, mu, lam, eta,
+                                  block_r=block_r, interpret=interpret)
+    if impl == "ref":
+        return prox_update_ref(wi, wtau, g, mu, lam, eta)
+    raise ValueError(f"unknown prox impl {impl!r}")
+
+
+def prox_update_tree(tree_wi, tree_wtau, tree_g, mu, lam, eta,
+                     *, impl: Impl = "ref", interpret: bool | None = None):
+    """Leaf-wise fused update over parameter pytrees."""
+
+    def per_leaf(wi, wtau, g):
+        return prox_update(wi, wtau, g, mu, lam, eta, impl=impl,
+                           interpret=interpret)
+
+    return jax.tree_util.tree_map(per_leaf, tree_wi, tree_wtau, tree_g)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused FedEPM client update (paper eq. (20)).
+
+Why a kernel: the inner FedEPM iteration is run k0 times per round over the
+*entire parameter tree* and is purely elementwise -- it is memory-bound by
+construction. Unfused, eq. (20) is five HBM-roundtrip ops
+(sub, scale, sub, soft-threshold, scale-add); fused it is one read of
+(w_i, w_tau, g) and one write, i.e. 4 streams instead of ~12. Block shape
+(block_r, 128) keeps the lane dimension hardware-aligned; the scalar triple
+(mu, lam, eta) rides along as a (1, 4) VMEM operand mapped to every block
+(mu changes every iteration, so it must stay a runtime value -- baking it in
+statically would force a retrace per step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret
+
+_LANES = 128
+
+
+def _prox_kernel(wi_ref, wtau_ref, g_ref, s_ref, o_ref):
+    wi = wi_ref[...].astype(jnp.float32)
+    wtau = wtau_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mu = s_ref[0, 0]
+    lam = s_ref[0, 1]
+    eta = s_ref[0, 2]
+    wt = mu * (wi - wtau) - g
+    soft = jnp.sign(wt) * jnp.maximum(jnp.abs(wt) - lam, 0.0)
+    o_ref[...] = (wtau + soft / (eta + mu)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def _prox_call(wi, wtau, g, scalars, *, block_r: int, interpret: bool):
+    R, C = wi.shape
+    grid = (R // block_r,)
+    blk = lambda i: (i, 0)
+    spec = pl.BlockSpec((block_r, C), blk)
+    return pl.pallas_call(
+        _prox_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, pl.BlockSpec((1, 4), lambda i: (0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), wi.dtype),
+        interpret=interpret,
+    )(wi, wtau, g, scalars)
+
+
+def prox_update_pallas(wi: jax.Array, wtau: jax.Array, g: jax.Array,
+                       mu, lam, eta, *, block_r: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """Fused eq. (20) update on arrays of any (matching) shape."""
+    if interpret is None:
+        interpret = default_interpret()
+    shape = wi.shape
+    n = wi.size
+    cols = _LANES
+    rows = -(-n // cols)
+    # round rows up to a multiple of block_r
+    rows = -(-rows // block_r) * block_r
+    pad = rows * cols - n
+
+    def flat(x):
+        return jnp.pad(x.reshape(-1), (0, pad)).reshape(rows, cols)
+
+    scalars = jnp.stack(
+        [jnp.asarray(mu, jnp.float32), jnp.asarray(lam, jnp.float32),
+         jnp.asarray(eta, jnp.float32), jnp.asarray(0.0, jnp.float32)]
+    ).reshape(1, 4)
+    out = _prox_call(flat(wi), flat(wtau), flat(g), scalars,
+                     block_r=block_r, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

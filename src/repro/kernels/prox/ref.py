@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused FedEPM client update, paper eq. (20).
+
+Given the broadcast point w^tau, the client's current iterate w_i^k, the
+round gradient g_i = grad f_i(w^tau), and the (already-updated) proximal
+weight mu_{i,k+1}:
+
+    wt  = mu * (w_i - w_tau) - g
+    out = w_tau + soft(wt, lam) / (eta + mu)
+
+This is the exact closed-form solution of the linearised sub-problem (23).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft(t: jax.Array, a) -> jax.Array:
+    return jnp.sign(t) * jnp.maximum(jnp.abs(t) - a, 0.0)
+
+
+def prox_update_ref(wi: jax.Array, wtau: jax.Array, g: jax.Array,
+                    mu, lam, eta) -> jax.Array:
+    """Computed in fp32; result cast back to the client-state dtype (the
+    distributed runtime stores W/Z in bf16 for the large archs)."""
+    f32 = jnp.float32
+    wt = mu * (wi.astype(f32) - wtau.astype(f32)) - g.astype(f32)
+    out = wtau.astype(f32) + soft(wt, lam) / (eta + mu)
+    return out.astype(wi.dtype)

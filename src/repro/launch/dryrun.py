@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) combination: build the step
+(launch/steps.py), ``.lower().compile()`` it against the production mesh,
+and record
+
+  * ``compiled.memory_analysis()``  -- proves the program fits HBM,
+  * ``compiled.cost_analysis()``    -- HLO FLOPs/bytes (NOTE: XLA counts a
+    while-loop body ONCE; launch/roofline.py applies the trip-count
+    corrections and the analytic model),
+  * a collective census parsed from the compiled HLO text (op kind,
+    operand bytes, whether it sits inside a while body),
+
+into artifacts/dryrun/<mesh>/<arch>__<shape>.json. Skips (encoder decode,
+non-sub-quadratic long-context) are recorded with their reason.
+
+Usage:
+  python -m repro.launch.dryrun [--arch A] [--shape S] [--mesh single|multi|both]
+        [--ens gather|a2a] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../artifacts/dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128,512]{...}' -> bytes. Tuple shapes handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([\d,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_census(hlo_text: str):
+    """Parse collective ops from HLO text.
+
+    Returns a list of dicts: {op, bytes, computation, count}. Bytes are the
+    OUTPUT shape bytes of the op (a good proxy for data moved per device
+    for AG/AR; for reduce-scatter/all-to-all it is the shard output).
+    Loop multiplicity is resolved by launch/roofline.py using known static
+    trip counts.
+    """
+    ops = []
+    current_comp = "<module>"
+    for line in hlo_text.splitlines():
+        mc = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", line)
+        if line and not line[0].isspace():
+            mname = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            if mname and ("{" in line or "->" in line):
+                current_comp = mname.group(1)
+        for kind in _COLLECTIVES:
+            # match '<shape> <kind>(' or '<kind>-start('
+            m = re.search(
+                r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]\S*))\s+%?"
+                + kind + r"(?:-start)?\(", line)
+            if m:
+                shape_str = m.group(1)
+                if shape_str.startswith("("):
+                    total = sum(_shape_bytes(s.strip())
+                                for s in shape_str[1:-1].split(","))
+                else:
+                    total = _shape_bytes(shape_str)
+                ops.append({"op": kind, "bytes": total,
+                            "computation": current_comp})
+    return ops
+
+
+def while_loop_info(hlo_text: str):
+    """(trips, parents) via launch/roofline.parse_hlo_loops."""
+    from repro.launch.roofline import parse_hlo_loops
+    return parse_hlo_loops(hlo_text)
+
+
+def run_one(arch: str, shape: str, mesh_kind: str, *, ens: str = "gather",
+            force: bool = False, out_dir: str = ARTIFACT_DIR,
+            tag: str = ""):
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as steps_mod
+
+    os.makedirs(os.path.join(out_dir, mesh_kind), exist_ok=True)
+    stem = f"{arch}__{shape}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, mesh_kind, stem + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "ens": ens, "tag": tag,
+           "timestamp": time.time()}
+    t0 = time.time()
+    try:
+        kw = {"ens": ens} if shape == "train_4k" else {}
+        bundle = steps_mod.build_step(arch, shape, mesh, **kw)
+        if isinstance(bundle, steps_mod.Skip):
+            rec.update(status="skip", reason=bundle.reason)
+        else:
+            lowered = bundle.lower()
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            census = collective_census(hlo)
+            trips, parents = while_loop_info(hlo)
+            static = dict(bundle.static)
+            cfg = static.pop("cfg", None)
+            fed = static.pop("fed", None)
+            rec.update(
+                status="ok",
+                notes=bundle.notes,
+                kind=bundle.kind,
+                lower_s=round(t1 - t0, 1),
+                compile_s=round(t2 - t1, 1),
+                memory={
+                    "argument_bytes": int(ma.argument_size_in_bytes),
+                    "output_bytes": int(ma.output_size_in_bytes),
+                    "temp_bytes": int(ma.temp_size_in_bytes),
+                    "alias_bytes": int(ma.alias_size_in_bytes),
+                    "peak_bytes": int(ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+                },
+                cost={k: float(v) for k, v in ca.items()
+                      if isinstance(v, (int, float))},
+                collectives=census,
+                while_trips=trips,
+                while_parents=parents,
+                static=static,
+                cfg_summary=None if cfg is None else {
+                    "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+                    "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+                    "d_ff": cfg.d_ff, "vocab": cfg.vocab,
+                    "family": cfg.family,
+                    "sliding_window": cfg.sliding_window,
+                    "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+                },
+            )
+    except Exception as e:  # noqa: BLE001 -- a failed combo is a data point
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:],
+                   elapsed_s=round(time.time() - t0, 1))
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    from repro import configs
+    from repro.models.config import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (default: all ten)")
+    ap.add_argument("--shape", default=None,
+                    help="input shape (default: all four)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--ens", default="gather", choices=["gather", "a2a"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else configs.ALL_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_one(arch, shape, mesh_kind, ens=args.ens,
+                              force=args.force, tag=args.tag)
+                status = rec["status"]
+                if status == "ok":
+                    n_ok += 1
+                    pk = rec["memory"]["peak_bytes"] / 1e9
+                    print(f"[{mesh_kind}] {arch:18s} {shape:12s} OK    "
+                          f"peak/dev={pk:7.2f}GB "
+                          f"flops={rec['cost'].get('flops', 0):.3e} "
+                          f"compile={rec.get('compile_s', 0):.0f}s",
+                          flush=True)
+                elif status == "skip":
+                    n_skip += 1
+                    print(f"[{mesh_kind}] {arch:18s} {shape:12s} SKIP  "
+                          f"{rec['reason']}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"[{mesh_kind}] {arch:18s} {shape:12s} FAIL  "
+                          f"{rec['error'][:160]}", flush=True)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Build the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+artifacts/dryrun JSON records.
+
+    PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def _fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.2f}ms"
+
+
+def load_records(root: str, mesh: str):
+    d = os.path.join(root, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json") and "__" in fn:
+            with open(os.path.join(d, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs):
+    from repro.models.config import INPUT_SHAPES
+    lines = [
+        "| arch | shape | status | peak GB/dev | HLO flops (raw) | "
+        "compile s | notes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    shape_order = list(INPUT_SHAPES)
+    recs = sorted(recs, key=lambda r: (r["arch"],
+                                       shape_order.index(r["shape"])))
+    for r in recs:
+        if r.get("tag"):
+            continue
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | "
+                f"{_fmt_bytes(r['memory']['peak_bytes'])} | "
+                f"{r['cost'].get('flops', 0):.3e} | "
+                f"{r.get('compile_s', 0):.0f} | {r.get('notes', '')} |")
+        elif r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - |"
+                         f" {r['reason']} |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - |"
+                         f" {r['error'][:80]} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, root: str, mesh: str):
+    from repro.launch.roofline import analyse
+    from repro.launch.steps import resolve_arch
+    from repro.models.config import INPUT_SHAPES
+
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "MODEL_FLOPS | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    shape_order = list(INPUT_SHAPES)
+    for r in sorted(recs, key=lambda r: (r["arch"],
+                                         shape_order.index(r["shape"]))):
+        if r.get("tag") or r["status"] != "ok":
+            continue
+        shape = INPUT_SHAPES[r["shape"]]
+        cfg = resolve_arch(r["arch"], shape)[0]
+        a = analyse(r, cfg, shape)
+        rows.append(a)
+        dom = {"compute": a.compute_s, "memory": a.memory_s,
+               "collective": a.collective_s}[a.bottleneck]
+        note = ""
+        if a.bottleneck == "compute":
+            note = "more chips / lower-precision matmuls"
+        elif a.bottleneck == "memory":
+            note = "fuse elementwise passes / quantise state"
+        else:
+            note = "coordinate-sharded ENS (a2a) / overlap"
+        lines.append(
+            f"| {a.arch} | {a.shape} | {_fmt_s(a.compute_s)} | "
+            f"{_fmt_s(a.memory_s)} | {_fmt_s(a.collective_s)} | "
+            f"**{a.bottleneck}** | {a.model_flops:.3e} | "
+            f"{a.useful_ratio:.2f} | {note} |")
+    return "\n".join(lines), rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--kind", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args(argv)
+    recs = load_records(args.dir, args.mesh)
+    if args.kind in ("dryrun", "both"):
+        print(f"### Dry-run table ({args.mesh} mesh, "
+              f"{'2x16x16' if args.mesh == 'multi' else '16x16'})\n")
+        print(dryrun_table(recs))
+        print()
+    if args.kind in ("roofline", "both"):
+        print(f"### Roofline table ({args.mesh} mesh)\n")
+        t, _ = roofline_table(recs, args.dir, args.mesh)
+        print(t)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,448 @@
+"""Step builders: (architecture x input shape x mesh) -> jit-ready step.
+
+This is the piece the dry-run, the roofline tool, and the real launchers
+all share. For every assigned (arch, shape) pair it produces a
+``StepBundle``: the step callable, abstract arguments (ShapeDtypeStruct --
+no allocation), and the in/out shardings for the production mesh.
+
+Shape semantics (assignment spec):
+  train_4k    -> ONE FedEPM communication round (the paper's technique is
+                 the trainer; k0 inner iterations + ENS aggregation + DP
+                 upload). Client layout per configs.fed_plan (spatial /
+                 temporal, DESIGN.md §2a).
+  prefill_32k -> serve_prefill: full forward over the prompt, returns
+                 next-token logits + decode state.
+  decode_32k, long_500k -> serve_decode: ONE token through a KV/recurrent
+                 cache of seq_len. long_500k on full-attention archs uses
+                 the sliding-window VARIANT (window 4096); encoder-only
+                 archs skip decode shapes (both recorded in notes/skips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core import distributed as dist_mod
+from repro.core.fedepm import FedEPMConfig
+from repro.core.tasks import make_chunked_lm_loss
+from repro.launch.mesh import client_axes, n_client_groups
+from repro.sharding.rules import DEFAULT_RULES, axis_rules
+from repro.models import dense as dense_mod
+from repro.models.config import INPUT_SHAPES, ArchConfig, InputShape
+from repro.models.registry import Model, get_model
+
+SWA_WINDOW = 4096  # sliding-window width for the long_500k dense variant
+
+# serving params above this many bytes-per-chip (TP-only) switch to
+# FSDP(+TP) storage so one copy fits HBM
+_SERVE_FSDP_THRESHOLD = 8 << 30
+
+
+@dataclasses.dataclass
+class StepBundle:
+    arch: str
+    shape: str
+    kind: str                 # "train" | "prefill" | "decode"
+    fn: Callable              # step(*args)
+    args: tuple               # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    out_shardings: Any        # None = let XLA choose
+    donate_argnums: tuple = ()
+    notes: str = ""
+    static: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+@dataclasses.dataclass
+class Skip:
+    arch: str
+    shape: str
+    reason: str
+
+
+# ---------------------------------------------------------------------------
+# arch resolution (variants + skips)
+# ---------------------------------------------------------------------------
+
+def resolve_arch(name: str, shape: InputShape):
+    """Returns (cfg, note) or Skip."""
+    cfg = configs.get_config(name)
+    note = ""
+    if shape.kind == "decode" and cfg.attention == "bidirectional":
+        return Skip(name, shape.name,
+                    "encoder-only architecture: no decode step exists")
+    if shape.name == "long_500k":
+        sub_quadratic = cfg.family in ("xlstm", "hybrid", "ssm") or \
+            cfg.sliding_window is not None
+        if not sub_quadratic:
+            if cfg.family in ("dense", "vlm"):
+                cfg = dataclasses.replace(cfg, sliding_window=SWA_WINDOW)
+                note = (f"long_500k uses the sliding-window VARIANT "
+                        f"(window={SWA_WINDOW}); full attention would need "
+                        f"a {shape.seq_len}-token dense cache")
+            else:
+                return Skip(name, shape.name,
+                            "no sub-quadratic variant for this family")
+    return cfg, note
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def lm_batch_specs(cfg: ArchConfig, lead: tuple, seq: int,
+                   with_targets: bool = True) -> dict:
+    """Batch pytree for one model call; ``lead`` are leading axes
+    (e.g. (m, b) for stacked clients, (B,) for serving)."""
+    d = {}
+    if cfg.family == "audio":
+        d["frame_embeds"] = _sds(lead + (seq, cfg.d_model), cfg.dtype)
+        t_total = seq
+    elif cfg.family == "vlm":
+        t_text = max(seq - cfg.n_patches, 16)
+        d["tokens"] = _sds(lead + (t_text,), jnp.int32)
+        d["patch_embeds"] = _sds(lead + (cfg.n_patches, cfg.d_model),
+                                 cfg.dtype)
+        t_total = t_text + cfg.n_patches
+    else:
+        d["tokens"] = _sds(lead + (seq,), jnp.int32)
+        t_total = seq
+    if with_targets:
+        d["targets"] = _sds(lead + (t_total,), jnp.int32)
+        d["loss_mask"] = _sds(lead + (t_total,), jnp.float32)
+    return d
+
+
+def train_activation_rules(mesh: Mesh, mode: str,
+                           seq_parallel: bool = True) -> dict:
+    """Logical-axis rules active while TRACING the train step.
+
+    seq_res -> "model" is Megatron-style sequence parallelism for the
+    residual stream: the per-layer saved activations (the only cross-layer
+    memory under per-block remat) are sharded 16-way; attention/MLP inputs
+    are re-gathered per block. In spatial mode the per-client batch axis is
+    unsharded (the client axis is pinned by vmap spmd_axis_name); in
+    temporal mode the batch axis shards over the client axes."""
+    ca = client_axes(mesh)
+    r = dict(DEFAULT_RULES)
+    r.update({
+        "batch": None if mode == "spatial" else ca,
+        "seq": None,
+        "seq_res": ("model",) if seq_parallel else None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": None,
+    })
+    return r
+
+
+def serve_activation_rules(mesh: Mesh) -> dict:
+    ca = client_axes(mesh)
+    r = dict(DEFAULT_RULES)
+    r.update({
+        "batch": ca,
+        "seq": None,
+        "seq_res": None,
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "vocab": ("model",),
+        "experts": None,
+    })
+    return r
+
+
+def _unembed_chunk(cfg: ArchConfig):
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        return lambda h, params: dense_mod.unembed(h, params, cfg)
+    return lambda h, params: jnp.einsum(
+        "btd,dv->btv", h, params["unembed"].astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# serve-state spec heuristic
+# ---------------------------------------------------------------------------
+
+def auto_state_specs(abstract_state, mesh: Mesh, batch_size: int,
+                     batch_axes: tuple, model_axis: str = "model"):
+    """Per-leaf: first axis (among the leading two) equal to batch_size ->
+    batch axes; then the largest remaining divisible axis -> model axis.
+    Tiny leaves stay replicated."""
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    bsz = int(np.prod([mesh.shape[a] for a in
+                       (batch_axes if isinstance(ba, tuple) else (ba,))]))
+    ms = mesh.shape[model_axis]
+
+    def one(leaf):
+        parts = [None] * leaf.ndim
+        if batch_size > 1:
+            for i in range(min(2, leaf.ndim)):
+                if leaf.shape[i] == batch_size and batch_size % bsz == 0:
+                    parts[i] = ba
+                    break
+        best, best_dim = -1, 0
+        for i in range(leaf.ndim):
+            if parts[i] is None and leaf.shape[i] % ms == 0 \
+                    and leaf.shape[i] >= max(ms, 64) \
+                    and leaf.shape[i] > best_dim:
+                best, best_dim = i, leaf.shape[i]
+        if best >= 0 and leaf.size >= (1 << 16):
+            parts[best] = model_axis
+        return P(*parts)
+
+    return jax.tree_util.tree_map(one, abstract_state)
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# train step (FedEPM round)
+# ---------------------------------------------------------------------------
+
+def build_train_step(arch: str, mesh: Mesh, *, ens: str = "gather",
+                     k0: int = 4, eps_dp: float = 0.1, rho: float = 0.5,
+                     remat: bool = False, loss_chunk: int = 512):
+    # per-BLOCK remat is on by default via ArchConfig.remat; ``remat`` here
+    # additionally remats the WHOLE loss (rarely needed).
+    shape = INPUT_SHAPES["train_4k"]
+    res = resolve_arch(arch, shape)
+    if isinstance(res, Skip):
+        return res
+    cfg, note = res
+    plan = configs.fed_plan(arch)
+    ca = client_axes(mesh)
+    if plan["mode"] == "spatial":
+        m = n_client_groups(mesh)
+        dist = dist_mod.DistConfig(
+            mode="spatial", ens=ens, client_axes=ca, fsdp_axes=(),
+            state_dtype=jnp.bfloat16
+            if plan.get("state_dtype") == "bfloat16" else None,
+            remat=remat)
+        # tiny models: tensor parallelism over 16 chips costs more in
+        # per-layer activation collectives than it saves (smollm: X=567ms
+        # vs C=37ms); instead replicate weights inside the client group
+        # and use the "model" axis as intra-client BATCH parallelism
+        # (EXPERIMENTS.md §Perf 1.6)
+        from repro.launch.roofline import total_param_bytes
+        tiny = total_param_bytes(cfg) // mesh.shape["model"] < (128 << 20)
+    else:
+        m = int(plan["m"])
+        b_client = shape.global_batch // m
+        # batch axes: largest suffix of the client axes whose product
+        # divides the per-client batch (multi-pod: 16-seq clients cannot
+        # shard over pod x data = 32)
+        batch_axes = ca
+        while batch_axes and b_client % int(np.prod(
+                [mesh.shape[a] for a in batch_axes])):
+            batch_axes = batch_axes[1:]
+        batch_axes = batch_axes or ("data",)
+        # cap microbatching so the per-step batch still covers the batch
+        # mesh axes: if b_step < |axes| XLA cannot batch-partition the
+        # attention and falls back to contraction sharding, inserting an
+        # all-reduce PER ATTENTION CHUNK (measured: x61440 on llava,
+        # EXPERIMENTS.md §Perf 1.1)
+        ca_size = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        mb = min(int(plan.get("microbatch", 1)),
+                 max(1, b_client // ca_size))
+        dist = dist_mod.DistConfig(
+            mode="temporal", ens="gather", client_axes=batch_axes,
+            fsdp_axes=("data",), state_dtype=None, remat=remat,
+            microbatch=mb)
+    if shape.global_batch % m:
+        raise ValueError(f"global_batch {shape.global_batch} % m {m}")
+    b_local = shape.global_batch // m
+
+    model = get_model(cfg)
+    family = type(model)  # noqa: F841
+    from repro.models import registry as _r  # family module for hidden()
+    mod = _r._FAMILY_MODULES[cfg.family]
+    hidden_fn = lambda params, batch: mod.hidden(params, batch, cfg)  # noqa
+    loss_fn = make_chunked_lm_loss(hidden_fn, _unembed_chunk(cfg),
+                                   chunk=loss_chunk)
+
+    fed_cfg = FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0,
+                                          eps_dp=eps_dp)
+    init_fn, step_fn, sspecs_fn = dist_mod.build_fedepm(
+        model, loss_fn, fed_cfg, mesh, dist)
+
+    abstract_state = jax.eval_shape(init_fn, jax.ShapeDtypeStruct(
+        (2,), jnp.uint32))
+    sspecs = sspecs_fn(abstract_state)
+    batch = lm_batch_specs(cfg, (m, b_local), shape.seq_len)
+    bspecs = dist_mod.batch_specs(batch, dist)
+
+    # sequence-parallel residuals pay a per-layer all-gather; only worth
+    # it when the stored residual stream would otherwise threaten HBM
+    # (measured: smollm paid 40 GB/device of gathers to save 2 GB of
+    # storage -- EXPERIMENTS.md §Perf 1.2)
+    b_step = b_local if dist.mode == "spatial" \
+        else (shape.global_batch // m) // max(dist.microbatch, 1)
+    resid_bytes = cfg.n_layers * b_step * shape.seq_len * cfg.d_model * 2
+    rules = train_activation_rules(mesh, dist.mode,
+                                   seq_parallel=resid_bytes > 4e9)
+    if dist.mode == "spatial" and tiny and b_local % mesh.shape["model"] == 0:
+        rules.update({"batch": ("model",), "heads": None, "kv_heads": None,
+                      "mlp": None, "vocab": None, "seq_res": None})
+        # feature storage fully replicated too: a model-sharded weight
+        # consumed INSIDE a recurrent scan inserts a collective per
+        # timestep (xlstm sLSTM: 2.4 MB all-reduce x 4096 steps x 3
+        # layers -- EXPERIMENTS.md §Perf 1.7)
+        def _m_only(spec):
+            return P(spec[0]) if len(spec) else P()
+        sspecs = sspecs._replace(
+            w_tau=jax.tree_util.tree_map(
+                lambda _: P(), sspecs.w_tau,
+                is_leaf=lambda x: isinstance(x, P)),
+            W=jax.tree_util.tree_map(
+                _m_only, sspecs.W, is_leaf=lambda x: isinstance(x, P)),
+            Z=jax.tree_util.tree_map(
+                _m_only, sspecs.Z, is_leaf=lambda x: isinstance(x, P)))
+
+    def fn(state, batches):
+        with axis_rules(mesh, rules):
+            return step_fn(state, batches, sspecs)
+
+    in_sh = (_named(sspecs, mesh), _named(bspecs, mesh))
+    out_sh = (_named(sspecs, mesh), None)
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="train", fn=fn,
+        args=(abstract_state, batch), in_shardings=in_sh,
+        out_shardings=out_sh, donate_argnums=(0,),
+        notes="; ".join(filter(None, [note, f"fedepm[{dist.mode}] m={m} "
+                                            f"k0={k0} ens={dist.ens}"])),
+        static={"mode": dist.mode, "m": m, "k0": k0, "b_local": b_local,
+                "ens": dist.ens, "cfg": cfg, "fed": fed_cfg})
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def _serve_param_setup(cfg: ArchConfig, mesh: Mesh):
+    """Abstract params + storage specs (TP, +FSDP if one copy is too big)."""
+    model = get_model(cfg)
+    abstract_params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    dist_tp = dist_mod.DistConfig(mode="spatial", fsdp_axes=())
+    pspecs = dist_mod.param_specs(cfg, abstract_params, mesh, dist_tp)
+    per_chip = 0
+    for sp, leaf in zip(
+            jax.tree_util.tree_leaves(pspecs,
+                                      is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_leaves(abstract_params)):
+        div = 1
+        for e in sp:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, tuple) else (e,)):
+                div *= mesh.shape[a]
+        per_chip += leaf.size * leaf.dtype.itemsize // div
+    fsdp = per_chip > _SERVE_FSDP_THRESHOLD
+    if fsdp:
+        dist_f = dist_mod.DistConfig(mode="temporal", fsdp_axes=("data",))
+        pspecs = dist_mod.param_specs(cfg, abstract_params, mesh, dist_f)
+    return model, abstract_params, pspecs, fsdp
+
+
+def build_prefill_step(arch: str, mesh: Mesh):
+    shape = INPUT_SHAPES["prefill_32k"]
+    res = resolve_arch(arch, shape)
+    if isinstance(res, Skip):
+        return res
+    cfg, note = res
+    model, aparams, pspecs, fsdp = _serve_param_setup(cfg, mesh)
+    ca = client_axes(mesh)
+    B = shape.global_batch
+    batch = lm_batch_specs(cfg, (B,), shape.seq_len, with_targets=False)
+    ca_spec = ca if len(ca) > 1 else ca[0]
+    bspecs = jax.tree_util.tree_map(
+        lambda x: P(ca_spec, *([None] * (x.ndim - 1))), batch)
+
+    rules = serve_activation_rules(mesh)
+    if cfg.attention == "bidirectional":
+        # encoder: prefill == full encode (logits for every frame)
+        def fn(params, b):
+            with axis_rules(mesh, rules):
+                return model.apply(params, b)
+    else:
+        def fn(params, b):
+            with axis_rules(mesh, rules):
+                return model.prefill(params, b, max_len=shape.seq_len)
+    in_sh = (_named(pspecs, mesh), _named(bspecs, mesh))
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="prefill", fn=fn,
+        args=(aparams, batch), in_shardings=in_sh, out_shardings=None,
+        notes="; ".join(filter(None, [note, "fsdp-params" if fsdp else ""])),
+        static={"B": B, "fsdp": fsdp, "cfg": cfg})
+
+
+def build_decode_step(arch: str, mesh: Mesh, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    res = resolve_arch(arch, shape)
+    if isinstance(res, Skip):
+        return res
+    cfg, note = res
+    model = get_model(cfg)
+    if not model.has_decode:
+        return Skip(arch, shape.name, "encoder-only: no decode step")
+    model, aparams, pspecs, fsdp = _serve_param_setup(cfg, mesh)
+    ca = client_axes(mesh)
+    B = shape.global_batch
+    plen = jnp.ones((), jnp.int32) * (shape.seq_len - 1)
+    astate = jax.eval_shape(
+        lambda: model.init_decode_state(B, shape.seq_len, plen))
+    stspecs = auto_state_specs(astate, mesh, B, ca)
+    batch = {"tokens": _sds((B, 1), jnp.int32)}
+    ca_spec = ca if len(ca) > 1 else ca[0]
+    bspec = {"tokens": P(ca_spec, None) if B > 1 else P(None, None)}
+
+    rules = serve_activation_rules(mesh)
+    if fsdp:
+        # weight-stationary decode: leave per-token activations
+        # unconstrained so XLA partial-sums over the weights' fsdp axis
+        # instead of all-gathering every layer's weights per token
+        rules["batch"] = None
+
+    def fn(params, state, b):
+        with axis_rules(mesh, rules):
+            return model.decode_step(params, state, b)
+
+    in_sh = (_named(pspecs, mesh), _named(stspecs, mesh),
+             _named(bspec, mesh))
+    # logits sharding unconstrained; state out matches state in (donated)
+    out_sh = (None, _named(stspecs, mesh))
+    return StepBundle(
+        arch=arch, shape=shape.name, kind="decode", fn=fn,
+        args=(aparams, astate, batch), in_shardings=in_sh,
+        out_shardings=out_sh, donate_argnums=(1,),
+        notes="; ".join(filter(None, [note, "fsdp-params" if fsdp else ""])),
+        static={"B": B, "fsdp": fsdp, "cfg": cfg, "S": shape.seq_len})
+
+
+def build_step(arch: str, shape_name: str, mesh: Mesh, **kw):
+    if shape_name == "train_4k":
+        return build_train_step(arch, mesh, **kw)
+    if shape_name == "prefill_32k":
+        return build_prefill_step(arch, mesh)
+    return build_decode_step(arch, mesh, shape_name)

@@ -1,0 +1,189 @@
+"""Logical-axis metadata: pytrees congruent with each family's params whose
+leaves are tuples of logical axis names (see sharding/specs.py for the
+mapping to mesh axes).
+
+Conventions:
+  * rank-1 leaves (norm scales, gate biases, per-head scalars) are
+    replicated -- they are tiny and sharding them buys nothing;
+  * stacked-layer leaves carry a leading "layers" axis;
+  * names follow sharding/specs.MODEL_AXIS_RULES. Storage sharding may
+    differ from compute layout (e.g. mamba's fused in_proj is stored
+    "proj"-sharded; the SSD compute is head-parallel via activation
+    constraints) -- XLA's SPMD partitioner bridges the two.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.config import ArchConfig
+from repro.models.ssm import _segments
+from repro.models.xlstm import _is_slstm
+
+tmap = jax.tree_util.tree_map
+
+_IS_LOGICAL = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(e, (str, type(None))) for e in x)
+
+
+def _norm(cfg: ArchConfig, dim_name: str = "embed"):
+    p = {"scale": (dim_name,)}
+    if cfg.norm == "layernorm":
+        p["bias"] = (dim_name,)
+    return p
+
+
+def _attn(cfg: ArchConfig):
+    p = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.bias:
+        p.update({"bq": ("heads", "head_dim"),
+                  "bk": ("kv_heads", "head_dim"),
+                  "bv": ("kv_heads", "head_dim"),
+                  "bo": ("embed",)})
+    return p
+
+
+def _mlp(cfg: ArchConfig):
+    p = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.mlp == "swiglu":
+        p["wg"] = ("embed", "mlp")
+    if cfg.bias:
+        p["bi"] = ("mlp",)
+        p["bo"] = ("embed",)
+    return p
+
+
+def _stack(layer_tree):
+    """Prefix every leaf with the stacked 'layers' axis."""
+    return tmap(lambda t: ("layers",) + t, layer_tree, is_leaf=_IS_LOGICAL)
+
+
+# ---------------------------------------------------------------------------
+# per family
+# ---------------------------------------------------------------------------
+
+def dense_logical(cfg: ArchConfig):
+    layer = {"ln_attn": _norm(cfg), "attn": _attn(cfg), "mlp": _mlp(cfg)}
+    if not cfg.parallel_block:
+        layer["ln_mlp"] = _norm(cfg)
+    out = {
+        "embed": ("vocab", "embed"),
+        "layers": _stack(layer),
+        "ln_f": _norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ("embed", "vocab")
+    return out
+
+
+def moe_logical(cfg: ArchConfig):
+    layer = {
+        "ln_attn": _norm(cfg),
+        "attn": _attn(cfg),
+        "ln_mlp": _norm(cfg),
+        "moe": {
+            "router": ("embed", "experts"),
+            "wi": ("experts", "embed", "mlp"),
+            "wg": ("experts", "embed", "mlp"),
+            "wo": ("experts", "mlp", "embed"),
+        },
+    }
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": _stack(layer),
+        "ln_f": _norm(cfg),
+        "unembed": ("embed", "vocab"),
+    }
+
+
+def _mlstm_logical(cfg: ArchConfig):
+    return {
+        "ln": _norm(cfg),
+        "w_up": ("embed", "inner"),
+        "w_gate": ("embed", "inner"),
+        "w_q": ("inner_in", "inner"),
+        "w_k": ("inner_in", "inner"),
+        "w_v": ("inner_in", "inner"),
+        "w_if": ("inner", "gates"),
+        "b_if": ("gates",),
+        "ln_out": {"scale": ("inner",)},
+        "w_down": ("inner", "embed"),
+    }
+
+
+def _slstm_logical(cfg: ArchConfig):
+    # sLSTM is sequential + recurrent; keep its core replicated, shard GLU.
+    return {
+        "ln": _norm(cfg),
+        "w_z": ("embed", "embed2"),
+        "w_i": ("embed", "sheads"),
+        "w_f": ("embed", "sheads"),
+        "w_o": ("embed", "embed2"),
+        "r_z": ("embed", "embed2"),
+        "b_i": ("sheads",),
+        "b_f": ("sheads",),
+        "ln_out": {"scale": ("embed",)},
+        "w_glu_i": ("embed", "glu"),
+        "w_glu_g": ("embed", "glu"),
+        "w_glu_o": ("glu", "embed"),
+    }
+
+
+def xlstm_logical(cfg: ArchConfig):
+    layers = [
+        _slstm_logical(cfg) if _is_slstm(cfg, i) else _mlstm_logical(cfg)
+        for i in range(cfg.n_layers)
+    ]
+    return {
+        "embed": ("vocab", "embed"),
+        "layers": layers,
+        "ln_f": _norm(cfg),
+        "unembed": ("embed", "vocab"),
+    }
+
+
+def ssm_logical(cfg: ArchConfig):
+    mamba = {
+        "ln": _norm(cfg),
+        "in_proj": ("embed", "proj"),
+        "conv_w": ("convw", "conv"),
+        "conv_b": ("conv",),
+        "A_log": ("sheads",),
+        "D": ("sheads",),
+        "dt_bias": ("sheads",),
+        "ln_out": {"scale": ("inner",)},
+        "out_proj": ("inner", "embed"),
+    }
+    out = {
+        "embed": ("vocab", "embed"),
+        "mamba_layers": _stack(mamba),
+        "ln_f": _norm(cfg),
+        "unembed": ("embed", "vocab"),
+    }
+    if cfg.shared_attn_every > 0:
+        out["shared_attn"] = {
+            "ln_attn": _norm(cfg),
+            "attn": _attn(cfg),
+            "ln_mlp": _norm(cfg),
+            "mlp": _mlp(cfg),
+        }
+    return out
+
+
+_FAMILY_LOGICAL = {
+    "dense": dense_logical,
+    "vlm": dense_logical,
+    "audio": dense_logical,
+    "moe": moe_logical,
+    "xlstm": xlstm_logical,
+    "hybrid": ssm_logical,
+    "ssm": ssm_logical,
+}
+
+
+def param_logical(cfg: ArchConfig):
+    return _FAMILY_LOGICAL[cfg.family](cfg)

@@ -1,0 +1,488 @@
+"""Mamba2 (SSD) layers and the Zamba2-style hybrid (arXiv:2411.15242).
+
+Mamba2 layer (State-Space Duality form):
+  in_proj -> (z, x, B, C, dt); short causal depthwise conv on (x, B, C);
+  per-head scalar decay A (A = -exp(A_log)); chunked SSD scan
+      h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,   y_t = C_t^T h_t + D x_t
+  gated RMSNorm; out_proj. The chunk dimension is a ``lax.scan``; intra-chunk
+  interaction is dense (chunk x chunk) matmuls -- the same TPU-native
+  pattern as the mLSTM in models/xlstm.py, but without log-domain
+  stabilisation (decays are <= 1, dt is bounded, so plain exp is safe).
+
+Zamba2 hybrid: a backbone of Mamba2 layers with ONE shared transformer
+block (GQA attention + SwiGLU MLP, weights reused) applied every
+``shared_attn_every`` layers. The real Zamba2 concatenates the block input
+with the original embeddings and uses LoRA-specialised copies; we implement
+the shared-weights core (the memory-saving insight) and note the
+simplification in DESIGN.md. Decode state is O(1) per mamba layer
+(conv tail + SSD state) plus one KV cache per shared-attn application,
+which is what makes ``long_500k`` feasible for the hybrid.
+
+Layer stacking: mamba layers are stacked (leading L axis) and applied with
+``lax.scan`` *per segment* between shared-attn applications, keeping the
+HLO size O(segments), not O(layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import dense
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    CacheSpec,
+    apply_mlp,
+    apply_norm,
+    cache_append,
+    cache_from_prefill,
+    decode_attention,
+    dense_init,
+    embed_init,
+    flash_attention,
+    init_attention,
+    init_cache,
+    init_mlp,
+    init_norm,
+    maybe_remat,
+    out_proj,
+    qkv_proj,
+    rope,
+)
+from repro.sharding.rules import constrain
+
+_CONV_W = 4  # mamba2 depthwise conv width
+
+
+# ---------------------------------------------------------------------------
+# dims
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads if cfg.ssm_heads else d_in // 64
+    hd = d_in // H
+    N = cfg.ssm_state
+    return d_in, H, hd, N
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_mamba_layer(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, H, hd, N = _dims(cfg)
+    conv_ch = d_in + 2 * N  # x + B + C (ngroups = 1)
+    ks = jax.random.split(key, 5)
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[3], (H,), minval=jnp.log(1e-3),
+                                   maxval=jnp.log(1e-1)))))
+    return {
+        "ln": init_norm(cfg.norm, d, cfg.param_dtype),
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H),
+                              cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_W, conv_ch)) * 0.2
+                   ).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(cfg.param_dtype),
+        "D": jnp.ones((H,), cfg.param_dtype),
+        "dt_bias": dt_bias.astype(cfg.param_dtype),
+        "ln_out": init_norm("rmsnorm", d_in, cfg.param_dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), cfg.param_dtype),
+    }
+
+
+def init_shared_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln_attn": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.hd, cfg.bias,
+                               cfg.param_dtype),
+        "ln_mlp": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, cfg.bias,
+                        cfg.param_dtype),
+    }
+
+
+def _segments(cfg: ArchConfig):
+    """Static segmentation: shared attn runs before mamba layer i when
+    i % shared_attn_every == 0. Returns list of (attn_before, n_mamba)."""
+    if cfg.shared_attn_every <= 0:
+        return [(False, cfg.n_layers)]
+    segs = []
+    i = 0
+    while i < cfg.n_layers:
+        n = min(cfg.shared_attn_every, cfg.n_layers - i)
+        segs.append((True, n))
+        i += n
+    return segs
+
+
+def init(key, cfg: ArchConfig):
+    k_emb, k_layers, k_shared, k_out = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_mamba_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "mamba_layers": layers,
+        "ln_f": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "unembed": dense_init(k_out, (cfg.d_model, cfg.vocab),
+                              cfg.param_dtype),
+    }
+    if cfg.shared_attn_every > 0:
+        params["shared_attn"] = init_shared_block(k_shared, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv (width 4, implemented as shifted adds)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w, b, tail=None):
+    """x: (B, T, C); w: (W, C); tail: (B, W-1, C) previous inputs or None.
+
+    Returns (y, new_tail). y[t] = sum_k w[k] * x[t - (W-1) + k] + b.
+    """
+    B, T, C = x.shape
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # (B, T+W-1, C)
+    y = jnp.zeros_like(x)
+    for k in range(W):
+        y = y + xp[:, k:k + T] * w[k].astype(x.dtype)
+    new_tail = xp[:, T:, :] if W > 1 else tail
+    return jax.nn.silu(y + b.astype(x.dtype)), new_tail
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan
+# ---------------------------------------------------------------------------
+
+def _ssd_scan(x, Bm, Cm, dt, A, chunk: int, h0=None):
+    """Chunked SSD. x: (B, T, H, hd); Bm, Cm: (B, T, N); dt: (B, T, H);
+    A: (H,) negative. h0: (B, H, hd, N) or None. Returns (y, h_final)."""
+    B, T, H, hd = x.shape
+    N = Bm.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
+    Tp = x.shape[1]
+    nC = Tp // chunk
+
+    xc = jnp.moveaxis(x.reshape(B, nC, chunk, H, hd), 1, 0)      # (nC,B,c,H,hd)
+    Bc = jnp.moveaxis(Bm.reshape(B, nC, chunk, N), 1, 0)         # (nC,B,c,N)
+    Cc = jnp.moveaxis(Cm.reshape(B, nC, chunk, N), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nC, chunk, H), 1, 0)        # (nC,B,c,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def per_chunk(h, xs):
+        xb, Bb, Cb, dtb = xs
+        xf = xb.astype(jnp.float32)
+        dtf = dtb.astype(jnp.float32)
+        a = dtf * A[None, None, :]                  # (B,c,H) log decay steps
+        A_cum = jnp.cumsum(a, axis=1)               # (B,c,H)
+        # intra-chunk: L[t,s] = exp(A_t - A_s) * dt_s, causal
+        diff = A_cum[:, :, None, :] - A_cum[:, None, :, :]  # (B,t,s,H)
+        L = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0) \
+            * dtf[:, None, :, :]                    # (B,t,s,H)
+        G = jnp.einsum("btn,bsn->bts", Cb.astype(jnp.float32),
+                       Bb.astype(jnp.float32))      # (B,t,s)
+        W = G[..., None] * L                        # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", W, xf)
+        # state contribution: exp(A_t) C_t . h
+        y_state = jnp.einsum("btn,bhdn,bth->bthd",
+                             Cb.astype(jnp.float32), h, jnp.exp(A_cum))
+        y = y_intra + y_state
+        # state update
+        A_tot = A_cum[:, -1, :]                     # (B,H)
+        w_src = jnp.exp(A_tot[:, None, :] - A_cum) * dtf   # (B,c,H)
+        h_new = jnp.exp(A_tot)[:, :, None, None] * h + jnp.einsum(
+            "bshd,bsn,bsh->bhdn", xf, Bb.astype(jnp.float32), w_src)
+        return h_new, y
+
+    h, ys = lax.scan(per_chunk, h0, (xc, Bc, Cc, dtc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Tp, H, hd)
+    return y[:, :T], h
+
+
+def _ssd_step(x1, B1, C1, dt1, A, h):
+    """One decode step. x1: (B, H, hd); B1, C1: (B, N); dt1: (B, H)."""
+    a = jnp.exp(dt1.astype(jnp.float32) * A[None, :])      # (B,H)
+    upd = jnp.einsum("bhd,bn,bh->bhdn", x1.astype(jnp.float32),
+                     B1.astype(jnp.float32), dt1.astype(jnp.float32))
+    h = a[..., None, None] * h + upd
+    y = jnp.einsum("bn,bhdn->bhd", C1.astype(jnp.float32), h)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# mamba block forward / step
+# ---------------------------------------------------------------------------
+
+def _in_proj(x, p, cfg: ArchConfig):
+    d_in, H, hd, N = _dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in:2 * d_in + 2 * N]
+    dt_pre = proj[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt_pre
+
+
+def mamba_block(x, p, cfg: ArchConfig, state=None):
+    """x: (B, T, d) -> (y, state'). state = (conv_tail, h)."""
+    d_in, H, hd, N = _dims(cfg)
+    B, T, d = x.shape
+    hx = apply_norm(x, p["ln"], cfg.norm)
+    z, xBC, dt_pre = _in_proj(hx, p, cfg)
+    tail = state[0] if state is not None else None
+    xBC, new_tail = causal_conv(xBC, p["conv_w"], p["conv_b"], tail)
+    xs = xBC[..., :d_in].reshape(B, T, H, hd)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h0 = state[1] if state is not None else None
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    y, h = _ssd_scan(xs, Bm, Cm, dt, A, cfg.ssm_chunk, h0)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :,
+                                                                None]
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y = apply_norm(y, p["ln_out"], "rmsnorm") * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return x + out, (new_tail, h)
+
+
+def mamba_block_step(x1, p, cfg: ArchConfig, state):
+    d_in, H, hd, N = _dims(cfg)
+    B = x1.shape[0]
+    hx = apply_norm(x1, p["ln"], cfg.norm)
+    z, xBC, dt_pre = _in_proj(hx, p, cfg)
+    tail, h = state
+    xBC, new_tail = causal_conv(xBC, p["conv_w"], p["conv_b"], tail)
+    xs = xBC[:, 0, :d_in].reshape(B, H, hd)
+    B1 = xBC[:, 0, d_in:d_in + N]
+    C1 = xBC[:, 0, d_in + N:]
+    dt1 = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = _ssd_step(xs, B1, C1, dt1, A, h)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x1.dtype)
+    y = apply_norm(y, p["ln_out"], "rmsnorm") * jax.nn.silu(z)
+    return x1 + y @ p["out_proj"].astype(x1.dtype), (new_tail, h)
+
+
+# ---------------------------------------------------------------------------
+# shared attention block
+# ---------------------------------------------------------------------------
+
+def shared_block(x, p, cfg: ArchConfig, positions):
+    h = apply_norm(x, p["ln_attn"], cfg.norm)
+    q, k, v = qkv_proj(h, p["attn"])
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, mode="causal", window=cfg.sliding_window,
+                        q_positions=positions, kv_positions=positions)
+    x = x + out_proj(o, p["attn"])
+    h2 = apply_norm(x, p["ln_mlp"], cfg.norm)
+    x = x + apply_mlp(h2, p["mlp"], cfg.mlp)
+    return constrain(x, "batch", "seq_res", "embed"), (k, v)
+
+
+def shared_block_step(x1, p, cfg: ArchConfig, cache, pos):
+    positions = pos[:, None]
+    h = apply_norm(x1, p["ln_attn"], cfg.norm)
+    q, k, v = qkv_proj(h, p["attn"])
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    cache = cache_append(cache, k, v)
+    o = decode_attention(q, cache["k"], cache["v"], cache["pos"],
+                         window=cfg.sliding_window, q_position=pos)
+    x1 = x1 + out_proj(o, p["attn"])
+    h2 = apply_norm(x1, p["ln_mlp"], cfg.norm)
+    x1 = x1 + apply_mlp(h2, p["mlp"], cfg.mlp)
+    return x1, cache
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def _layer_slice(layers, a, b):
+    return jax.tree_util.tree_map(lambda x: x[a:b], layers)
+
+
+def _backbone(params, x, cfg: ArchConfig, positions, states=None,
+              collect_states=False):
+    """Run segments of scanned mamba layers with shared attn interleaved."""
+    segs = _segments(cfg)
+    idx = 0
+    out_states = []
+    caches = []
+    shared = maybe_remat(
+        lambda h, sp: shared_block(h, sp, cfg, positions)[0], cfg)
+    mamba = maybe_remat(
+        lambda h, lp: constrain(mamba_block(h, lp, cfg, None)[0],
+                                "batch", "seq_res", "embed"), cfg)
+
+    def mamba_stack(h, layers):
+        def body(hh, lp):
+            return mamba(hh, lp), None
+        h, _ = lax.scan(body, h, layers)
+        return h
+
+    if not collect_states and cfg.shared_attn_every > 0:
+        # TRAINING path: scan over the full-size segments so the 6-7
+        # shared-attn applications are ONE loop body (not unrolled --
+        # unrolling co-schedules all their backward buffers: measured
+        # +14 GB/device on zamba2). The ragged tail segment runs once.
+        k = cfg.shared_attn_every
+        n_full = cfg.n_layers // k
+        tail = cfg.n_layers - n_full * k
+        main = _layer_slice(params["mamba_layers"], 0, n_full * k)
+        grouped = jax.tree_util.tree_map(
+            lambda l: l.reshape((n_full, k) + l.shape[1:]), main)
+
+        def seg_body(h, seg_layers):
+            h = shared(h, params["shared_attn"])
+            return mamba_stack(h, seg_layers), None
+
+        x, _ = lax.scan(seg_body, x, grouped)
+        if tail:
+            x = shared(x, params["shared_attn"])
+            x = mamba_stack(x, _layer_slice(params["mamba_layers"],
+                                            n_full * k, cfg.n_layers))
+        return x, out_states, caches
+
+    for si, (attn_before, n) in enumerate(segs):
+        if attn_before and cfg.shared_attn_every > 0:
+            if collect_states:
+                x, kv = shared_block(x, params["shared_attn"], cfg,
+                                     positions)
+                caches.append(kv)
+            else:
+                x = shared(x, params["shared_attn"])
+        seg_layers = _layer_slice(params["mamba_layers"], idx, idx + n)
+
+        if collect_states:
+            def body(h, lp):
+                h, st = mamba_block(h, lp, cfg, None)
+                return h, st
+
+            x, seg_states = lax.scan(body, x, seg_layers)
+            out_states.append(seg_states)
+        else:
+            x = mamba_stack(x, seg_layers)
+        idx += n
+    return x, out_states, caches
+
+
+def hidden(params, batch, cfg: ArchConfig):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = _backbone(params, x, cfg, positions)
+    return apply_norm(x, params["ln_f"], cfg.norm)
+
+
+def apply(params, batch, cfg: ArchConfig):
+    x = hidden(params, batch, cfg)
+    return jnp.einsum("btd,dv->btv", x,
+                      params["unembed"].astype(x.dtype))
+
+
+def init_decode_state(cfg: ArchConfig, batch_size: int, seq_len: int,
+                      prefill_len=None):
+    d_in, H, hd, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    segs = _segments(cfg)
+    mamba_states = [
+        (jnp.zeros((n, batch_size, _CONV_W - 1, conv_ch), cfg.dtype),
+         jnp.zeros((n, batch_size, H, hd, N), jnp.float32))
+        for _, n in segs
+    ]
+    caches = []
+    if cfg.shared_attn_every > 0:
+        size = seq_len if cfg.sliding_window is None else min(
+            seq_len, cfg.sliding_window)
+        spec = CacheSpec(batch=batch_size, size=size,
+                         kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                         dtype=cfg.dtype)
+        caches = [init_cache(spec) for s in segs if s[0]]
+    return {"mamba": mamba_states, "caches": caches,
+            "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len=None):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    B, T = x.shape[0], x.shape[1]
+    positions = jnp.arange(T)
+    plen = batch.get("prefill_len", jnp.full((B,), T, jnp.int32))
+    segs = _segments(cfg)
+    size = max_len or T
+    if cfg.sliding_window is not None:
+        size = min(size, cfg.sliding_window)
+    spec = CacheSpec(batch=B, size=size, kv_heads=cfg.n_kv_heads,
+                     head_dim=cfg.hd, dtype=cfg.dtype)
+    idx = 0
+    mamba_states, caches = [], []
+    for attn_before, n in segs:
+        if attn_before and cfg.shared_attn_every > 0:
+            x, (k, v) = shared_block(x, params["shared_attn"], cfg, positions)
+            caches.append(cache_from_prefill(k, v, spec, plen))
+        seg_layers = _layer_slice(params["mamba_layers"], idx, idx + n)
+
+        def body(h, lp):
+            h, st = mamba_block(h, lp, cfg, None)
+            return h, st
+
+        x, seg_states = lax.scan(body, x, seg_layers)
+        # keep only the (conv_tail, h) final states; cast tail to dtype
+        mamba_states.append((seg_states[0].astype(cfg.dtype), seg_states[1]))
+        idx += n
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("btd,dv->btv", x[:, -1:],
+                        params["unembed"].astype(x.dtype))
+    return logits, {"mamba": mamba_states, "caches": caches,
+                    "pos": plen.astype(jnp.int32)}
+
+
+def decode_step(params, state, batch, cfg: ArchConfig):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    pos = state["pos"]
+    segs = _segments(cfg)
+    idx = 0
+    ci = 0
+    new_mamba, new_caches = [], []
+    for si, (attn_before, n) in enumerate(segs):
+        if attn_before and cfg.shared_attn_every > 0:
+            x, cache = shared_block_step(x, params["shared_attn"], cfg,
+                                         state["caches"][ci], pos)
+            new_caches.append(cache)
+            ci += 1
+        seg_layers = _layer_slice(params["mamba_layers"], idx, idx + n)
+
+        def body(h, layer_in):
+            lp, st = layer_in
+            h, st = mamba_block_step(h, lp, cfg, st)
+            return h, st
+
+        x, seg_states = lax.scan(body, x, (seg_layers, state["mamba"][si]))
+        new_mamba.append(seg_states)
+        idx += n
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype))
+    return logits, {"mamba": new_mamba, "caches": new_caches,
+                    "pos": pos + 1}

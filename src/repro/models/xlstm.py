@@ -1,0 +1,426 @@
+"""xLSTM (arXiv:2405.04517): sLSTM + mLSTM residual blocks.
+
+Faithful-to-structure JAX implementation of the two block types:
+
+  * **mLSTM block** (matrix memory, fully parallelisable): pre-norm, up
+    projection by ``ssm_expand``, per-head exponentially-gated *linear
+    attention* with matrix state C in R^{d_h x d_h} and normaliser n in
+    R^{d_h}. We implement the **stabilised chunkwise-parallel form**: within
+    a chunk the interaction is a masked (gated) attention matrix; across
+    chunks a recurrent (C, n, m) state is carried with log-domain
+    stabilisation, exactly the scheme that makes mLSTM trainable at long
+    context and O(1)-state at decode. TPU-native: the chunk dimension is a
+    ``lax.scan``; intra-chunk math is dense matmuls on (chunk, chunk) tiles
+    (MXU-friendly), no data-dependent control flow.
+  * **sLSTM block** (scalar memory, inherently sequential): per-head scalar
+    state (c, n, m) with exponential input gate and sigmoid/exp forget gate,
+    scanned over time. The paper notes sLSTM is not parallelisable -- the
+    scan is the honest implementation. A small GLU ("post up-projection" as
+    in the paper's sLSTM block, factor 4/3) follows.
+
+Block layout: ``slstm_every`` = s means layer indices {0, s, 2s, ...} are
+sLSTM blocks, the rest mLSTM (paper's xLSTM[a:b] notation). Decode state per
+layer is the (C, n, m) triple (mLSTM) or (c, n, m) (sLSTM) plus the previous
+hidden for the sLSTM recurrent connection -- O(1) in sequence length, which
+is why xlstm runs the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_norm, dense_init, embed_init, init_norm, maybe_remat
+from repro.sharding.rules import constrain
+
+_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    hd = d_in // H
+    return d_in, H, hd
+
+
+def init_mlstm_layer(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in, H, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": init_norm(cfg.norm, d, cfg.param_dtype),
+        "w_up": dense_init(ks[0], (d, d_in), cfg.param_dtype),
+        "w_gate": dense_init(ks[1], (d, d_in), cfg.param_dtype),
+        "w_q": dense_init(ks[2], (d_in, d_in), cfg.param_dtype),
+        "w_k": dense_init(ks[3], (d_in, d_in), cfg.param_dtype),
+        "w_v": dense_init(ks[4], (d_in, d_in), cfg.param_dtype),
+        "w_if": dense_init(ks[5], (d_in, 2 * H), cfg.param_dtype,
+                           scale=1e-2),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(cfg.param_dtype),
+        "ln_out": init_norm("rmsnorm", d_in, cfg.param_dtype),
+        "w_down": dense_init(ks[6], (d_in, d), cfg.param_dtype),
+    }
+
+
+def init_slstm_layer(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    d_glu = int(d * 4 / 3)
+    return {
+        "ln": init_norm(cfg.norm, d, cfg.param_dtype),
+        # input projections for (z, i, f, o) gates
+        "w_z": dense_init(ks[0], (d, d), cfg.param_dtype),
+        "w_i": dense_init(ks[1], (d, H), cfg.param_dtype, scale=1e-2),
+        "w_f": dense_init(ks[2], (d, H), cfg.param_dtype, scale=1e-2),
+        "w_o": dense_init(ks[3], (d, d), cfg.param_dtype),
+        # recurrent (hidden-to-gate) connections, block-diagonal per head
+        "r_z": dense_init(ks[4], (d, d), cfg.param_dtype, scale=1e-2),
+        "b_i": jnp.zeros((H,), cfg.param_dtype),
+        "b_f": (3.0 * jnp.ones((H,))).astype(cfg.param_dtype),
+        "ln_out": init_norm("rmsnorm", d, cfg.param_dtype),
+        # post-up-projection GLU (paper: factor 4/3)
+        "w_glu_i": dense_init(ks[5], (d, d_glu), cfg.param_dtype),
+        "w_glu_g": dense_init(ks[6], (d, d_glu), cfg.param_dtype),
+        "w_glu_o": dense_init(ks[7], (d_glu, d), cfg.param_dtype),
+    }
+
+
+def _is_slstm(cfg: ArchConfig, idx: int) -> bool:
+    return cfg.slstm_every > 0 and idx % cfg.slstm_every == 0
+
+
+def init(key, cfg: ArchConfig):
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    # heterogeneous list of per-layer dicts; the *kind* of layer i is a
+    # static function of cfg (_is_slstm), never stored in the pytree.
+    layers = [
+        init_slstm_layer(keys[i], cfg) if _is_slstm(cfg, i)
+        else init_mlstm_layer(keys[i], cfg)
+        for i in range(cfg.n_layers)
+    ]
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": layers,
+        "ln_f": init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "unembed": dense_init(k_out, (cfg.d_model, cfg.vocab),
+                              cfg.param_dtype),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise-parallel core
+# ---------------------------------------------------------------------------
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, chunk: int, state=None):
+    """Stabilised chunkwise mLSTM.
+
+    q, k, v: (B, T, H, hd); i_pre, f_pre: (B, T, H) gate pre-activations.
+    state: optional (C, n, m) with C (B, H, hd, hd), n (B, H, hd), m (B, H).
+    Returns (out (B, T, H, hd), state').
+    """
+    B, T, H, hd = q.shape
+    pad = (-T) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)   # exp(i)=0: no-op tokens
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=30.0)    # sigmoid(f)=1: keep state
+    Tp = q.shape[1]
+    nC = Tp // chunk
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def rs(x):  # (B, Tp, H, ...) -> (nC, B, H, chunk, ...)
+        x = x.reshape(B, nC, chunk, *x.shape[2:])
+        return jnp.moveaxis(jnp.swapaxes(x, 2, 3), 1, 0)
+
+    qc, kc, vc = rs(q * scale), rs(k), rs(v)                # (nC,B,H,c,hd)
+    ic = jnp.moveaxis(i_pre.reshape(B, nC, chunk, H), 3, 2)  # (B,nC,H,c)
+    fc = jnp.moveaxis(f_pre.reshape(B, nC, chunk, H), 3, 2)
+    ic = jnp.moveaxis(ic, 1, 0)                              # (nC,B,H,c)
+    fc = jnp.moveaxis(fc, 1, 0)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def per_chunk(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, ib, fb = xs  # (B,H,c,hd) x3, (B,H,c) x2
+        logf = jax.nn.log_sigmoid(fb.astype(jnp.float32))   # (B,H,c)
+        a = jnp.cumsum(logf, axis=-1)                       # A_t within chunk
+        a_total = a[..., -1]                                # (B,H)
+        # log weight of state seen by position t: m + a_t
+        # log weight of in-chunk source s at target t: a_t - a_s + i_s
+        src = ib.astype(jnp.float32) - a                    # (B,H,c): i_s - A_s
+        # Stabiliser per target position. State contribution to target t has
+        # log-scale m + A_t; intra source s has log-scale A_t - A_s + i_s
+        # = A_t + src_s. Factor exp(A_t) is common to numerator and
+        # normaliser, so stabilise by m_base = max(m, max_{s<=t} src_s)
+        # and divide both by exp(A_t + m_base).
+        m_intra = jnp.max(jnp.where(
+            jnp.tril(jnp.ones((chunk, chunk), bool))[None, None],
+            src[..., None, :], -jnp.inf), axis=-1)          # (B,H,c)
+        m_base = jnp.maximum(m_intra, m[..., None])         # (B,H,c)
+        # intra-chunk gated attention
+        dmat = src[..., None, :] - m_base[..., :, None]     # (B,H,c,c) log D_ts
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(mask[None, None], jnp.exp(dmat), 0.0)
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qb.astype(jnp.float32),
+                          kb.astype(jnp.float32))
+        w_intra = s_qk * D                                  # (B,H,c,c)
+        o_intra = jnp.einsum("bhts,bhsd->bhtd", w_intra, vb.astype(jnp.float32))
+        # inter-chunk (state) contribution, relative scale exp(m - m_base)
+        w_state = jnp.exp(m[..., None] - m_base)            # (B,H,c)
+        o_state = jnp.einsum("bhtd,bhde->bhte", qb.astype(jnp.float32), C)
+        n_state = jnp.einsum("bhtd,bhd->bht", qb.astype(jnp.float32), n)
+        o = o_intra + w_state[..., None] * o_state
+        # normaliser n_t^T q_t: sum_s D_ts (q_t . k_s) = row-sum of w_intra
+        nrm = jnp.abs(jnp.sum(w_intra, axis=-1) + w_state * n_state)
+        # mLSTM normaliser: max(|n^T q|, exp(-m_t_total)) with the shared
+        # exp(A_t + m_base) factor divided out => lower bound exp(-(a+m_base))
+        denom = jnp.maximum(nrm, jnp.exp(-(a + m_base)))
+        out = o / denom[..., None]
+        # ---- state update to end of chunk ----
+        # new m' = max(m + a_total, max_s (i_s + A_total - A_s))
+        carry_src = ib.astype(jnp.float32) + (a_total[..., None] - a)  # (B,H,c)
+        m_new = jnp.maximum(m + a_total, jnp.max(carry_src, axis=-1))
+        w_old = jnp.exp(m + a_total - m_new)                # (B,H)
+        w_src = jnp.exp(carry_src - m_new[..., None])       # (B,H,c)
+        C_new = w_old[..., None, None] * C + jnp.einsum(
+            "bhsd,bhse->bhde", kb.astype(jnp.float32) * w_src[..., None],
+            vb.astype(jnp.float32))
+        n_new = w_old[..., None] * n + jnp.einsum(
+            "bhsd,bhs->bhd", kb.astype(jnp.float32), w_src)
+        return (C_new, n_new, m_new), out
+
+    (C, n, m), outs = lax.scan(per_chunk, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    out = jnp.moveaxis(outs, 0, 1)                    # (B,nC,H,c,hd)
+    out = jnp.swapaxes(out, 2, 3).reshape(B, Tp, H, hd)
+    return out[:, :T], (C, n, m)
+
+
+def mlstm_step(q1, k1, v1, i1, f1, state):
+    """One decode step. q1,k1,v1: (B, H, hd); i1,f1: (B, H). O(1) state."""
+    C, n, m = state
+    hd = q1.shape[-1]
+    qf = q1.astype(jnp.float32) / jnp.sqrt(hd)
+    logf = jax.nn.log_sigmoid(f1.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, i1.astype(jnp.float32))
+    w_old = jnp.exp(logf + m - m_new)
+    w_in = jnp.exp(i1.astype(jnp.float32) - m_new)
+    C = w_old[..., None, None] * C + w_in[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k1.astype(jnp.float32), v1.astype(jnp.float32))
+    n = w_old[..., None] * n + w_in[..., None] * k1.astype(jnp.float32)
+    o = jnp.einsum("bhd,bhde->bhe", qf, C)
+    nrm = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    denom = jnp.maximum(nrm, jnp.exp(-m_new))
+    return o / denom[..., None], (C, n, m_new)
+
+
+def _mlstm_qkvif(x, p, cfg: ArchConfig):
+    d_in, H, hd = _mlstm_dims(cfg)
+    up = x @ p["w_up"].astype(x.dtype)
+    gate = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    q = (up @ p["w_q"].astype(x.dtype))
+    k = (up @ p["w_k"].astype(x.dtype))
+    v = (up @ p["w_v"].astype(x.dtype))
+    if_pre = up.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) \
+        + p["b_if"].astype(jnp.float32)
+    i_pre, f_pre = if_pre[..., :H], if_pre[..., H:]
+    shp = x.shape[:-1] + (H, hd)
+    return q.reshape(shp), k.reshape(shp), v.reshape(shp), i_pre, f_pre, gate
+
+
+def mlstm_block(x, p, cfg: ArchConfig, state=None):
+    """x: (B, T, d). Returns (y, state')."""
+    d_in, H, hd = _mlstm_dims(cfg)
+    h = apply_norm(x, p["ln"], cfg.norm)
+    q, k, v, i_pre, f_pre, gate = _mlstm_qkvif(h, p, cfg)
+    q = constrain(q, "batch", "seq", "heads", None)
+    out, state = _mlstm_scan(q, k, v, i_pre, f_pre, cfg.ssm_chunk, state)
+    B, T = x.shape[0], x.shape[1]
+    out = out.reshape(B, T, d_in).astype(x.dtype)
+    out = apply_norm(out, p["ln_out"], "rmsnorm") * gate
+    y = out @ p["w_down"].astype(x.dtype)
+    return x + y, state
+
+
+def mlstm_block_step(x1, p, cfg: ArchConfig, state):
+    """x1: (B, 1, d) decode step."""
+    d_in, H, hd = _mlstm_dims(cfg)
+    h = apply_norm(x1, p["ln"], cfg.norm)
+    q, k, v, i_pre, f_pre, gate = _mlstm_qkvif(h, p, cfg)
+    out, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0],
+                            f_pre[:, 0], state)
+    out = out.reshape(x1.shape[0], 1, d_in).astype(x1.dtype)
+    out = apply_norm(out, p["ln_out"], "rmsnorm") * gate
+    return x1 + out @ p["w_down"].astype(x1.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scan)
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(carry, xs, H, hd):
+    """carry: (c, n, m, h_prev) each (B, H, hd) / (B, H); xs precomputed."""
+    c, n, m, h_prev = carry
+    z_x, i_x, f_x, o_x, r_z = xs  # projections at time t (+ recurrent weight)
+    B = z_x.shape[0]
+    h_flat = h_prev.reshape(B, H * hd)
+    z = jnp.tanh(z_x + (h_flat @ r_z).reshape(B, H, hd))
+    i_pre = i_x  # (B, H)
+    f_pre = f_x
+    o = jax.nn.sigmoid(o_x).reshape(B, H, hd)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c_new = f_g[..., None] * c + i_g[..., None] * z
+    n_new = f_g[..., None] * n + i_g[..., None]
+    h_new = o * (c_new / jnp.maximum(n_new, _EPS))
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block(x, p, cfg: ArchConfig, state=None):
+    B, T, d = x.shape
+    H = cfg.n_heads
+    hd = d // H
+    h = apply_norm(x, p["ln"], cfg.norm)
+    hf = h.astype(jnp.float32)
+    z_x = hf @ p["w_z"].astype(jnp.float32)
+    i_x = hf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    f_x = hf @ p["w_f"].astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+    o_x = hf @ p["w_o"].astype(jnp.float32)
+    if state is None:
+        c0 = jnp.zeros((B, H, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        h0 = jnp.zeros((B, H, hd), jnp.float32)
+        state = (c0, n0, m0, h0)
+    r_z = p["r_z"].astype(jnp.float32)
+
+    def step(carry, xs):
+        zz, ii, ff, oo = xs
+        return _slstm_cell(carry, (zz, ii, ff, oo, r_z), H, hd)
+
+    state, hs = lax.scan(
+        step, state,
+        (jnp.moveaxis(z_x.reshape(B, T, H, hd), 1, 0),
+         jnp.moveaxis(i_x, 1, 0), jnp.moveaxis(f_x, 1, 0),
+         jnp.moveaxis(o_x.reshape(B, T, H, hd), 1, 0)))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, T, d)
+    out = apply_norm(out.astype(x.dtype), p["ln_out"], "rmsnorm")
+    y = x + out
+    # GLU post-projection
+    g = jax.nn.silu(y @ p["w_glu_i"].astype(x.dtype)) * (
+        y @ p["w_glu_g"].astype(x.dtype))
+    return y + g @ p["w_glu_o"].astype(x.dtype), state
+
+
+def slstm_block_step(x1, p, cfg: ArchConfig, state):
+    B, _, d = x1.shape
+    H = cfg.n_heads
+    hd = d // H
+    h = apply_norm(x1, p["ln"], cfg.norm)
+    hf = h[:, 0].astype(jnp.float32)
+    z_x = (hf @ p["w_z"].astype(jnp.float32)).reshape(B, H, hd)
+    i_x = hf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    f_x = hf @ p["w_f"].astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+    o_x = (hf @ p["w_o"].astype(jnp.float32)).reshape(B, H, hd)
+    state, h_new = _slstm_cell(
+        state, (z_x, i_x, f_x, o_x, p["r_z"].astype(jnp.float32)), H, hd)
+    out = h_new.reshape(B, 1, d)
+    out = apply_norm(out.astype(x1.dtype), p["ln_out"], "rmsnorm")
+    y = x1 + out
+    g = jax.nn.silu(y @ p["w_glu_i"].astype(x1.dtype)) * (
+        y @ p["w_glu_g"].astype(x1.dtype))
+    return y + g @ p["w_glu_o"].astype(x1.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def hidden(params, batch, cfg: ArchConfig):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    sblk = maybe_remat(lambda h, lp: slstm_block(h, lp, cfg)[0], cfg)
+    mblk = maybe_remat(lambda h, lp: mlstm_block(h, lp, cfg)[0], cfg)
+    for i, lp in enumerate(params["layers"]):
+        x = sblk(x, lp) if _is_slstm(cfg, i) else mblk(x, lp)
+        x = constrain(x, "batch", "seq_res", "embed")
+    return apply_norm(x, params["ln_f"], cfg.norm)
+
+
+def apply(params, batch, cfg: ArchConfig):
+    x = hidden(params, batch, cfg)
+    w = params["unembed"].astype(x.dtype)
+    return jnp.einsum("btd,dv->btv", x, w)
+
+
+def init_decode_state(cfg: ArchConfig, batch_size: int, seq_len: int,
+                      prefill_len=None):
+    d_in, H, hd = _mlstm_dims(cfg)
+    Hs, hds = cfg.n_heads, cfg.d_model // cfg.n_heads
+    states = []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            states.append((
+                jnp.zeros((batch_size, Hs, hds), jnp.float32),
+                jnp.zeros((batch_size, Hs, hds), jnp.float32),
+                jnp.full((batch_size, Hs), -1e30, jnp.float32),
+                jnp.zeros((batch_size, Hs, hds), jnp.float32)))
+        else:
+            states.append((
+                jnp.zeros((batch_size, H, hd, hd), jnp.float32),
+                jnp.zeros((batch_size, H, hd), jnp.float32),
+                jnp.full((batch_size, H), -1e30, jnp.float32)))
+    return {"states": states, "pos": jnp.zeros((batch_size,), jnp.int32)}
+
+
+def prefill(params, batch, cfg: ArchConfig, max_len=None):
+    """Forward over the prompt, carrying recurrent state out (O(1) state;
+    max_len is accepted for interface uniformity and ignored)."""
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+    states = []
+    for i, lp in enumerate(params["layers"]):
+        if _is_slstm(cfg, i):
+            x, st = slstm_block(x, lp, cfg)
+        else:
+            x, st = mlstm_block(x, lp, cfg)
+        states.append(st)
+        x = constrain(x, "batch", "seq_res", "embed")
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("btd,dv->btv", x[:, -1:],
+                        params["unembed"].astype(x.dtype))
+    B, T = batch["tokens"].shape
+    return logits, {"states": states,
+                    "pos": jnp.full((B,), T, jnp.int32)}
+
+
+def decode_step(params, state, batch, cfg: ArchConfig):
+    x = params["embed"][batch["tokens"]].astype(cfg.dtype)  # (B, 1, d)
+    new_states = []
+    for i, (lp, st) in enumerate(zip(params["layers"], state["states"])):
+        if _is_slstm(cfg, i):
+            x, st = slstm_block_step(x, lp, cfg, st)
+        else:
+            x, st = mlstm_block_step(x, lp, cfg, st)
+        new_states.append(st)
+    x = apply_norm(x, params["ln_f"], cfg.norm)
+    logits = jnp.einsum("btd,dv->btv", x, params["unembed"].astype(x.dtype))
+    return logits, {"states": new_states, "pos": state["pos"] + 1}

@@ -1,0 +1,59 @@
+"""Minimal optimizers for non-federated comparisons and serving-side tools.
+
+FedEPM itself needs NO optimizer state (the prox update (20) is closed
+form) -- one of its practical selling points vs Adam-based FL. These are
+used by the centralized-baseline benchmarks and the quickstart example.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+tmap = jax.tree_util.tree_map
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (or momentum)
+    nu: Any          # second moment (adam only)
+
+
+def sgd(lr: float, momentum: float = 0.9):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=tmap(jnp.zeros_like, params), nu=None)
+
+    def update(grads, state, params):
+        mu = tmap(lambda m, g: momentum * m + g, state.mu, grads)
+        new_params = tmap(lambda p, m: p - lr * m, params, mu)
+        return new_params, OptState(state.step + 1, mu, None)
+
+    return init, update
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=tmap(jnp.zeros_like, params),
+                        nu=tmap(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        mu = tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = tmap(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return p - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                             + weight_decay * p)
+
+        return tmap(upd, params, mu, nu), OptState(step, mu, nu)
+
+    return init, update

@@ -1,0 +1,144 @@
+"""Logical-axis sharding: models annotate activations/params with *logical*
+axis names; a rules table (set by the launcher for the active mesh) maps them
+to mesh axes. Outside any rules context the annotations are no-ops, so the
+same model code runs single-device tests and 512-chip dry-runs unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_tls = threading.local()
+
+# Default logical->mesh mapping for the production meshes. "client" is the
+# FedEPM client-group axis; everything model-internal shards over "model".
+DEFAULT_RULES: dict[str, Optional[tuple]] = {
+    # data-ish axes
+    "client": ("pod", "data"),
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": None,   # residual stream; ("model",) = Megatron-style SP
+    # parameter axes
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": None,
+    "head_dim": None,
+    "state": None,
+    # generic replicated
+    None: None,
+}
+
+
+def single_pod_rules() -> dict:
+    r = dict(DEFAULT_RULES)
+    r["client"] = ("data",)
+    r["batch"] = ("data",)
+    return r
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Mapping[str, Optional[tuple]]):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_rules():
+    return getattr(_tls, "ctx", None)
+
+
+def _spec_for(logical: Sequence[Optional[str]], rules, mesh) -> P:
+    parts = []
+    used = set()
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        if ax is None:
+            parts.append(None)
+            continue
+        ax = tuple(a for a in ax if a in mesh.axis_names and a not in used)
+        if not ax:
+            parts.append(None)
+        else:
+            used.update(ax)
+            parts.append(ax if len(ax) > 1 else ax[0])
+    return P(*parts)
+
+
+def batch_groups():
+    """(G, axes): the number of mesh shards the logical "batch" axis maps
+    to under the active rules, and the axis names. (1, ()) outside a rules
+    context. Used by data-dependent layers (MoE dispatch) to keep their
+    routing LOCAL per shard instead of forcing a global all-gather."""
+    ctx = current_rules()
+    if ctx is None:
+        return 1, ()
+    mesh, rules = ctx
+    ax = rules.get("batch")
+    if not ax:
+        return 1, ()
+    axes = tuple(a for a in (ax if isinstance(ax, (tuple, list))
+                             else (ax,)) if a in mesh.axis_names)
+    g = 1
+    for a in axes:
+        g *= mesh.shape[a]
+    return g, axes
+
+
+def logical_sharding(logical: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    ctx = current_rules()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    return NamedSharding(mesh, _spec_for(logical, rules, mesh))
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context.
+
+    Axes whose dim is not divisible by the mapped mesh-axes product are
+    dropped (replicated), so models with odd head counts degrade gracefully.
+    """
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = _spec_for(logical, rules, mesh)
+    parts = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        parts.append(entry if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def param_sharding(logical_tree, abstract_tree):
+    """Map a pytree of logical-name-tuples to NamedShardings (or None)."""
+    ctx = current_rules()
+    if ctx is None:
+        return jax.tree_util.tree_map(lambda _: None, abstract_tree)
+    mesh, rules = ctx
+
+    def one(logical, leaf):
+        return NamedSharding(mesh, _spec_for(logical, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        one, logical_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

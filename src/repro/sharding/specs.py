@@ -1,0 +1,131 @@
+"""Parameter sharding: per-family logical axis trees -> PartitionSpecs.
+
+Every model family exposes ``param_logical(cfg)`` (see models/logical.py):
+a pytree congruent with its params whose leaves are tuples of logical axis
+names. This module maps those to concrete ``PartitionSpec``s for a mesh,
+with two safety rails:
+
+  * divisibility -- a logical rule is dropped (axis replicated) when the
+    dim is not divisible by the mesh-axes product, so odd head counts
+    (smollm 9H) or small dims degrade gracefully instead of failing;
+  * once-per-spec -- a mesh axis is used by at most one dim of a leaf.
+
+Modes:
+  ``spatial_rules``  -- feature axes -> "model"; client/batch -> client axes.
+  ``temporal_rules`` -- feature axes -> "model" PLUS an ``fsdp`` axis
+    ("data", and "pod" when requested) assigned greedily to the largest
+    still-unsharded dim of each leaf (ZeRO-3-style sharding so one copy of
+    a 141B model fits the pod; XLA inserts the per-layer all-gathers).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> preferred mesh axes (tried in order, first that fits)
+MODEL_AXIS_RULES: dict[str, tuple] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "inner": ("model",),       # xlstm/mamba expanded dim
+    "glu": ("model",),
+    "proj": ("model",),        # mamba fused in_proj output
+    "conv": ("model",),        # mamba conv channels
+    "experts": (),             # experts stay unsharded (top-2 of 8)
+    "embed": (),               # d_model replicated in spatial mode
+    "head_dim": (),
+    "state": (),
+    "gates": (),
+    "layers": (),              # stacked-layer leading axis
+}
+
+
+def _axes_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+_FALLBACK_MIN_SIZE = 1 << 16  # leaves above this always get "model"-sharded
+
+
+def leaf_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+              mesh: Mesh, rules: Mapping[str, tuple],
+              fsdp_axes: Sequence[str] = ()) -> P:
+    """Spec for one leaf.
+
+    Three passes: (1) logical rules; (2) fallback -- if a *large* leaf got
+    no "model" sharding (e.g. 9 or 40 heads on a 16-wide model axis),
+    assign "model" to its largest divisible dim so storage still scales;
+    (3) ``fsdp_axes`` go to the largest remaining dim (ZeRO-style).
+    """
+    assert len(logical) == len(shape), (logical, shape)
+    parts: list = [None] * len(shape)
+    used: set = set()
+    for i, name in enumerate(logical):
+        cand = rules.get(name, ()) if name else ()
+        cand = tuple(a for a in cand if a in mesh.axis_names
+                     and a not in used)
+        if cand and shape[i] % _axes_size(mesh, cand) == 0:
+            parts[i] = cand if len(cand) > 1 else cand[0]
+            used.update(cand)
+    if "model" in mesh.axis_names and "model" not in used \
+            and int(np.prod(shape)) >= _FALLBACK_MIN_SIZE:
+        ms = mesh.shape["model"]
+        best, best_dim = -1, 0
+        for i in range(len(shape)):
+            if parts[i] is None and shape[i] % ms == 0 and shape[i] >= ms \
+                    and shape[i] >= best_dim:
+                best, best_dim = i, shape[i]
+        if best >= 0:
+            parts[best] = "model"
+            used.add("model")
+    fsdp = tuple(a for a in fsdp_axes if a in mesh.axis_names
+                 and a not in used)
+    if fsdp:
+        fs = _axes_size(mesh, fsdp)
+        # largest unsharded, divisible dim (prefer later dims on ties)
+        best, best_dim = -1, 0
+        for i in range(len(shape)):
+            if parts[i] is None and shape[i] % fs == 0 and shape[i] >= fs \
+                    and shape[i] >= best_dim:
+                best, best_dim = i, shape[i]
+        if best >= 0:
+            parts[best] = fsdp if len(fsdp) > 1 else fsdp[0]
+    return P(*parts)
+
+
+def tree_specs(logical_tree, abstract_tree, mesh: Mesh,
+               rules: Mapping[str, tuple] | None = None,
+               fsdp_axes: Sequence[str] = (),
+               prepend: Sequence = ()):
+    """Map a logical tree + abstract (shaped) tree to PartitionSpecs.
+
+    ``prepend`` adds leading spec entries (e.g. the stacked client axis).
+    """
+    rules = rules if rules is not None else MODEL_AXIS_RULES
+
+    def one(logical, leaf):
+        shape = leaf.shape
+        core = shape[len(prepend):]
+        sp = leaf_spec(logical, core, mesh, rules, fsdp_axes)
+        return P(*prepend, *sp)
+
+    return jax.tree_util.tree_map(
+        one, logical_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def named(tree_of_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_tree(tree, tree_of_specs, mesh: Mesh):
+    shardings = named(tree_of_specs, mesh)
+    return jax.tree_util.tree_map(
+        jax.lax.with_sharding_constraint, tree, shardings)

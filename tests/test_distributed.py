@@ -1,0 +1,108 @@
+"""Distributed FedEPM equivalence: spatial (gather + a2a ENS) and temporal
+executions on an 8-device fake mesh must match the single-host reference.
+
+Runs in a SUBPROCESS so the forced host-device count never leaks into the
+other tests' single-device view.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, os.environ["REPRO_SRC"])
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import distributed as dist_mod
+from repro.core import fedepm
+from repro.core.tasks import make_lm_loss
+from repro.models import registry
+
+assert len(jax.devices()) == 8
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+
+cfg = configs.get_reduced("smollm-135m")
+model = registry.get_model(cfg)
+loss = make_lm_loss(model.apply)
+m, B, T = 4, 2, 16
+fcfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=0.5, k0=3, eps_dp=0.1)
+
+key = jax.random.PRNGKey(0)
+params0 = model.init(jax.random.PRNGKey(42))
+batch = {
+    "tokens": jax.random.randint(jax.random.PRNGKey(1), (m, B, T), 0,
+                                 cfg.vocab),
+    "targets": jax.random.randint(jax.random.PRNGKey(2), (m, B, T), 0,
+                                  cfg.vocab),
+    "loss_mask": jnp.ones((m, B, T), jnp.float32),
+}
+
+# ---- single-host reference ----
+ref_state = fedepm.init_state(key, params0, fcfg)
+ref_next, ref_metrics = jax.jit(
+    lambda s, b: fedepm.fedepm_round(s, b, loss, fcfg))(ref_state, batch)
+
+results = {}
+for mode, ens in [("spatial", "gather"), ("spatial", "a2a"),
+                  ("temporal", "gather")]:
+    dist = dist_mod.DistConfig(mode=mode, ens=ens, client_axes=("data",),
+                               fsdp_axes=("data",), remat=False)
+    init_fn, step_fn, sspecs_fn = dist_mod.build_fedepm(
+        model, loss, fcfg, mesh, dist)
+    astate = jax.eval_shape(init_fn, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    sspecs = sspecs_fn(astate)
+
+    def fn(state, batches):
+        return step_fn(state, batches, sspecs)
+
+    from repro.launch.steps import _named
+    jitted = jax.jit(fn, in_shardings=(_named(sspecs, mesh), None))
+    # IDENTICAL initial state to the reference (same key, same params0)
+    state = fedepm.init_state(key, params0, fcfg)
+    nxt, metrics = jitted(state, batch)
+    results[(mode, ens)] = (nxt, metrics)
+
+def tree_maxdiff(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(la, lb))
+
+wscale = max(float(jnp.max(jnp.abs(x))) for x in
+             jax.tree_util.tree_leaves(ref_next.W))
+# Z = W + DP noise; at random init the Laplace noise is enormous
+# (scale ~ ||g||_1 / (eps mu)), so its tolerance must be relative to Z
+zscale = max(float(jnp.max(jnp.abs(x.astype(jnp.float32)))) for x in
+             jax.tree_util.tree_leaves(ref_next.Z))
+for kk, (nxt, metrics) in results.items():
+    dW = tree_maxdiff(nxt.W, ref_next.W)
+    dw = tree_maxdiff(nxt.w_tau, ref_next.w_tau)
+    dZ = tree_maxdiff(nxt.Z, ref_next.Z)
+    dsel = float(jnp.sum(jnp.abs(metrics.selected.astype(jnp.int32)
+                                 - ref_metrics.selected.astype(jnp.int32))))
+    print(f"{kk}: dW={dW:.2e} dw_tau={dw:.2e} dZ={dZ:.2e} dsel={dsel}")
+    assert dsel == 0.0, (kk, "different client selection")
+    assert dw < 1e-4 * (1 + wscale), (kk, dw)
+    assert dW < 1e-4 * (1 + wscale), (kk, dW)
+    assert dZ < 1e-5 * (1 + zscale), (kk, dZ)
+print("DISTRIBUTED-EQUIVALENCE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_spatial_temporal_match_reference():
+    env = dict(os.environ)
+    env["REPRO_SRC"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "DISTRIBUTED-EQUIVALENCE-OK" in out.stdout, (
+        out.stdout[-3000:], out.stderr[-5000:])

@@ -1,0 +1,71 @@
+"""Differential-privacy machinery (Sec. V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp
+
+
+def test_laplace_moments():
+    key = jax.random.PRNGKey(0)
+    b = 0.7
+    x = dp.sample_laplace(key, (200000,), b)
+    # Laplace(0, b): E|x| = b, Var = 2 b^2
+    assert abs(float(jnp.mean(jnp.abs(x))) - b) < 0.02
+    assert abs(float(jnp.var(x)) - 2 * b * b) < 0.05
+    assert abs(float(jnp.mean(x))) < 0.02
+
+
+def test_laplace_tree_shapes_dtypes():
+    tree = {"a": jnp.zeros((3, 4), jnp.bfloat16), "b": jnp.zeros((7,))}
+    noise = dp.laplace_tree(jax.random.PRNGKey(1), tree, 0.5)
+    assert noise["a"].shape == (3, 4) and noise["a"].dtype == jnp.bfloat16
+    assert noise["b"].shape == (7,)
+
+
+def test_noise_scale_decays_with_mu():
+    d = jnp.asarray(3.0)
+    s1 = dp.fedepm_noise_scale(d, 0.1, 1.0)
+    s2 = dp.fedepm_noise_scale(d, 0.1, 10.0)
+    assert float(s2) == float(s1) / 10.0
+
+
+def test_snr_definition():
+    w = {"a": jnp.ones((100,))}
+    eps = {"a": jnp.ones((100,)) * 0.1}
+    # ||w|| = 10, ||eps|| = 1 -> log10(10) = 1
+    assert abs(float(dp.snr_db10(w, eps)) - 1.0) < 1e-5
+
+
+def test_sensitivity_surrogate():
+    g = {"a": jnp.asarray([1.0, -2.0]), "b": jnp.asarray([[0.5]])}
+    assert float(dp.sensitivity_surrogate(g)) == 2.0 * 3.5
+
+
+def test_clip_enforces_l1_bound():
+    g = {"a": jnp.asarray([3.0, -4.0])}
+    c = dp.clip_tree_l1(g, 1.0)
+    from repro.core.treeutil import tree_l1_norm
+    assert float(tree_l1_norm(c)) <= 1.0 + 1e-6
+    g2 = {"a": jnp.asarray([0.1, 0.2])}
+    c2 = dp.clip_tree_l1(g2, 1.0)
+    np.testing.assert_allclose(c2["a"], g2["a"])
+
+
+def test_epsilon_dp_empirical():
+    """Empirical check of the eps-DP mechanism on a 1-D example: the
+    Laplace mechanism output distributions for adjacent datasets satisfy
+    the eq. (24) ratio bound (up to sampling error)."""
+    key = jax.random.PRNGKey(2)
+    eps_dp = 0.5
+    delta = 1.0                      # sensitivity |f(D) - f(D')|
+    b = delta / eps_dp               # standard Laplace mechanism scale
+    n = 400000
+    out_d = 0.0 + dp.sample_laplace(key, (n,), b)
+    out_dp = delta + dp.sample_laplace(jax.random.fold_in(key, 1), (n,), b)
+    bins = np.linspace(-6, 6, 25)
+    h1, _ = np.histogram(np.asarray(out_d), bins=bins, density=True)
+    h2, _ = np.histogram(np.asarray(out_dp), bins=bins, density=True)
+    mask = (h1 > 1e-3) & (h2 > 1e-3)
+    ratio = np.abs(np.log(h1[mask] / h2[mask]))
+    assert np.max(ratio) <= eps_dp * 1.3  # slack for sampling error

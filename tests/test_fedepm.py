@@ -1,0 +1,167 @@
+"""FedEPM algorithm behaviour (Alg. 2) on the paper's task + baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, fedepm
+from repro.core.tasks import accuracy_logistic, make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+
+
+# Paper-scale task (d=20k keeps the gradient/noise scales in the regime
+# the paper's hyper-parameters were tuned for; at d=4000 the DP feedback
+# loop -- noisier w^tau => larger ||g||_1 => larger noise -- diverges).
+@pytest.fixture(scope="module")
+def task():
+    X, y = synth.adult_like(d=20000, n=14, seed=0)
+    m = 50
+    batches = partition_iid(X, y, m=m, seed=0)
+    batches = jax.tree_util.tree_map(jnp.asarray, batches)
+    loss = make_logistic_loss()
+    return X, y, m, batches, loss
+
+
+# measured by 5000-step centralized GD on this task (see DESIGN.md §8)
+F_OPT = 0.69176
+
+
+def _run_fedepm(task_t, rounds=60, eps_dp=0.1, rho=0.5, k0=8, **kw):
+    X, y, m, batches, loss = task_t
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0,
+                                             eps_dp=eps_dp, **kw)
+    state = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(X.shape[1]),
+                              cfg)
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    fs = []
+    for _ in range(rounds):
+        state, metrics = step(state)
+        fs.append(float(fedepm.global_objective(loss, state.w_tau, batches))
+                  / m)
+    return state, fs, cfg
+
+
+def test_fedepm_decreases_objective(task):
+    """Objective approaches the regularised optimum (absolute decline is
+    small by construction of the paper's normalisation, DESIGN.md §8)."""
+    state, fs, _ = _run_fedepm(task, rounds=60)
+    assert fs[-1] < fs[0] - 5e-4          # ln2 = 0.69315 -> ~0.6918
+    assert fs[-1] < F_OPT + 1e-3          # near the measured optimum
+    tail = fs[-10:]
+    assert max(tail) - min(tail) < 1e-3   # settled
+
+
+def test_fedepm_reaches_useful_accuracy(task):
+    """The regularised optimum of the paper's objective (beta=1e-3 on
+    unit-column features) attains ~0.74 accuracy (measured by long GD);
+    FedEPM should get within a few points of it under eps=0.1 DP."""
+    X, y, m, batches, loss = task
+    state, fs, _ = _run_fedepm(task, rounds=80, eps_dp=0.1)
+    acc = float(accuracy_logistic(state.w_tau, jnp.asarray(X),
+                                  jnp.asarray(y)))
+    assert acc > 0.70, acc
+
+
+def test_fedepm_matches_baselines_objective(task):
+    """Fig. 2 claim: all three algorithms approach the same objective."""
+    X, y, m, batches, loss = task
+    _, fs_epm, _ = _run_fedepm(task, rounds=80)
+
+    bcfg = baselines.BaselineConfig(m=m, k0=8, rho=0.5, eps_dp=0.1,
+                                    d_i=1.0, gamma_scale=2.0)
+    bstate = baselines.init_state(jax.random.PRNGKey(0),
+                                  jnp.zeros(X.shape[1]), bcfg)
+    step = jax.jit(lambda s: baselines.sfedavg_round(s, batches, loss, bcfg))
+    for _ in range(80):
+        bstate, _ = step(bstate)
+    f_avg = float(fedepm.global_objective(loss, bstate.w_tau, batches)) / m
+
+    pstate = baselines.init_state(jax.random.PRNGKey(0),
+                                  jnp.zeros(X.shape[1]), bcfg)
+    pstep = jax.jit(lambda s: baselines.sfedprox_round(s, batches, loss,
+                                                       bcfg))
+    for _ in range(80):
+        pstate, _ = pstep(pstate)
+    f_prox = float(fedepm.global_objective(loss, pstate.w_tau, batches)) / m
+
+    # all three settle at the same optimum (Fig. 2 claim), tight in abs
+    assert abs(fs_epm[-1] - f_avg) < 2e-3
+    assert abs(fs_epm[-1] - f_prox) < 2e-3
+
+
+def test_lyapunov_descent_noise_free(task):
+    """Lemma VI.1: with eps_dp off and full participation, F(w^tau, W^k)
+    descends monotonically once mu_{i,k} > r_i - eta."""
+    X, y, m, batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=1.0, k0=4,
+                                             eps_dp=-1.0, sampler="full")
+    state = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(X.shape[1]),
+                              cfg)
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    vals = []
+    for _ in range(40):
+        state, _ = step(state)
+        vals.append(float(fedepm.lyapunov(loss, state, batches, cfg)))
+    # allow a short burn-in; then monotone non-increase (tolerance for fp)
+    burn = 5
+    diffs = np.diff(vals[burn:])
+    assert np.all(diffs <= 1e-4 * (1 + np.abs(vals[burn])))
+
+
+def test_partial_participation_carries_state(task):
+    """Eq. (22): non-selected clients keep (w_i, z_i, mu_i)."""
+    X, y, m, batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=0.3, k0=4, eps_dp=0.1)
+    state = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(X.shape[1]),
+                              cfg)
+    new_state, metrics = jax.jit(
+        lambda s: fedepm.fedepm_round(s, batches, loss, cfg))(state)
+    sel = np.asarray(metrics.selected)
+    W_old = np.asarray(state.W)
+    W_new = np.asarray(new_state.W)
+    assert sel.sum() == int(round(0.3 * m))
+    np.testing.assert_array_equal(W_new[~sel], W_old[~sel])
+    assert np.all(np.any(W_new[sel] != W_old[sel], axis=-1))
+
+
+def test_mu_grows_geometrically(task):
+    X, y, m, batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=1.0, k0=4,
+                                             eps_dp=0.1, sampler="full")
+    state = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(X.shape[1]),
+                              cfg)
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    mus = []
+    for _ in range(10):
+        state, metrics = step(state)
+        mus.append(float(metrics.mu_last[0]))
+    ratios = np.asarray(mus[1:]) / np.asarray(mus[:-1])
+    # alpha^k0 growth (alpha=1.001, k0=4 -> ~1.004), modulated by drift
+    assert np.all(ratios > 1.0)
+
+
+def test_snr_decreases_with_stronger_privacy(task):
+    """Smaller eps => larger noise => smaller SNR (Fig. 5 trend)."""
+    snrs = {}
+    for eps in (0.1, 0.9):
+        state, fs, cfg = _run_fedepm(task, rounds=10, eps_dp=eps)
+        X, y, m, batches, loss = task
+        st = fedepm.init_state(jax.random.PRNGKey(1),
+                               jnp.zeros(X.shape[1]), cfg)
+        _, metrics = jax.jit(
+            lambda s: fedepm.fedepm_round(s, batches, loss, cfg))(st)
+        snrs[eps] = float(metrics.snr)
+    assert snrs[0.1] < snrs[0.9]
+
+
+def test_checkpoint_roundtrip(task, tmp_path):
+    from repro import checkpoint
+    X, y, m, batches, loss = task
+    state, _, cfg = _run_fedepm(task, rounds=2)
+    path = str(tmp_path / "ck")
+    checkpoint.save_fedepm(path, state, cfg)
+    restored, meta = checkpoint.restore_fedepm(path)
+    np.testing.assert_allclose(restored.w_tau, state.w_tau)
+    np.testing.assert_allclose(restored.k, state.k)
+    assert "fedepm_config" in meta

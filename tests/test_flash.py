@@ -1,0 +1,83 @@
+"""Flash attention (O(T)-memory custom VJP) vs naive reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import flash_attention
+
+
+def naive(q, k, v, mode="causal", window=None):
+    B, Tq, H, D = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    R = H // Hkv
+    qg = q.reshape(B, Tq, Hkv, R, D).astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qg,
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    qi, ki = jnp.arange(Tq), jnp.arange(Tk)
+    valid = jnp.ones((Tq, Tk), bool)
+    if mode == "causal":
+        valid &= ki[None] <= qi[:, None]
+    if window is not None:
+        valid &= (qi[:, None] - ki[None]) < window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, v.astype(jnp.float32))
+    return o.reshape(B, Tq, H, D).astype(q.dtype)
+
+
+@pytest.mark.parametrize("mode,window", [("causal", None),
+                                         ("bidirectional", None),
+                                         ("causal", 8)])
+@pytest.mark.parametrize("chunks", [(8, 16), (16, 8), (37, 37)])
+def test_forward_and_grads(mode, window, chunks):
+    qc, kc = chunks
+    key = jax.random.PRNGKey(0)
+    B, T, H, Hkv, D = 2, 37, 6, 2, 16
+    q = jax.random.normal(key, (B, T, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, Hkv, D))
+
+    def f1(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(
+            q, k, v, mode=mode, window=window, q_chunk=qc, kv_chunk=kc)))
+
+    def f2(q, k, v):
+        return jnp.sum(jnp.sin(naive(q, k, v, mode, window)))
+
+    o1 = flash_attention(q, k, v, mode=mode, window=window,
+                         q_chunk=qc, kv_chunk=kc)
+    o2 = naive(q, k, v, mode, window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_cross_attention_shapes():
+    """Tq != Tk (e.g. decode with a longer cache)."""
+    key = jax.random.PRNGKey(1)
+    B, Tq, Tk, H, Hkv, D = 2, 5, 29, 4, 4, 8
+    q = jax.random.normal(key, (B, Tq, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, Tk, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, Tk, Hkv, D))
+    qpos = jnp.arange(Tk - Tq, Tk)
+    o = flash_attention(q, k, v, mode="causal", q_positions=qpos,
+                        q_chunk=4, kv_chunk=8)
+    o2 = naive(jnp.pad(q, ((0, 0), (Tk - Tq, 0), (0, 0), (0, 0))), k, v,
+               "causal")[:, Tk - Tq:]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o2), atol=2e-5)
+
+
+def test_bf16_stability():
+    key = jax.random.PRNGKey(2)
+    B, T, H, D = 2, 64, 4, 32
+    q = (jax.random.normal(key, (B, T, H, D)) * 5).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.fold_in(key, 1),
+                           (B, T, H, D)) * 5).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, T, H, D)).astype(jnp.bfloat16)
+    o = flash_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    assert o.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(o.astype(jnp.float32))))

@@ -1,0 +1,79 @@
+"""Fused FedEPM client-update kernel (eq. (20)) vs the jnp oracle."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.prox import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(8,), (130,), (64, 64), (3, 5, 7),
+                                   (1, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    wi = (jax.random.normal(ks[0], shape) * 2).astype(dtype)
+    wt = (jax.random.normal(ks[1], shape) * 2).astype(dtype)
+    g = (jax.random.normal(ks[2], shape)).astype(dtype)
+    mu, lam, eta = 0.37, 0.05, 0.02
+    out_p = ops.prox_update(wi, wt, g, mu, lam, eta, impl="pallas",
+                            block_r=8, interpret=True)
+    out_r = ref.prox_update_ref(wi, wt, g, mu, lam, eta)
+    atol = 5e-6 if dtype == jnp.float32 else 4e-2  # 1 bf16 ULP at |x|~4
+    np.testing.assert_allclose(np.asarray(out_p, np.float32),
+                               np.asarray(out_r, np.float32), atol=atol)
+    assert out_p.dtype == wi.dtype
+
+
+@hypothesis.settings(deadline=None, max_examples=30)
+@hypothesis.given(
+    w=hnp.arrays(np.float32, 17, elements=st.floats(-10, 10, width=32)),
+    mu=st.floats(1e-3, 100.0),
+    lam=st.floats(1e-6, 5.0),
+    eta=st.floats(1e-6, 5.0),
+)
+def test_prox_solves_subproblem(w, mu, lam, eta):
+    """out is the argmin of (23): compare against a dense grid search over
+    per-coordinate candidates."""
+    wi = jnp.asarray(w)
+    wt = jnp.zeros_like(wi) + 0.3
+    g = jnp.linspace(-1, 1, wi.size)
+    out = ref.prox_update_ref(wi, wt, g, mu, lam, eta)
+    v_opt = out - wt
+
+    def obj(v):
+        return (g * v + mu / 2 * (v - (wi - wt)) ** 2
+                + lam * jnp.abs(v) + eta / 2 * v ** 2)
+
+    base = obj(v_opt)
+    tol = 1e-5 * (1.0 + jnp.abs(base))  # scale-aware fp32 tolerance
+    for d in (-1e-3, 1e-3, -0.1, 0.1):
+        assert bool(jnp.all(obj(v_opt + d) >= base - tol))
+
+
+def test_soft_threshold_two_lipschitz():
+    """Lemma A.1/(45): |soft(t,a)-soft(t',a)| <= 2|t-t'| -- the property
+    the DP proof (Thm V.1) rests on. Fuzz over a grid."""
+    t = jnp.linspace(-5, 5, 201)
+    for a in (0.1, 1.0, 3.0):
+        s = ref.soft(t, a)
+        dt = t[None, :] - t[:, None]
+        ds = s[None, :] - s[:, None]
+        assert float(jnp.max(jnp.abs(ds) - 2 * jnp.abs(dt))) <= 1e-6
+        # (and in fact soft-thresholding is 1-Lipschitz; the paper's bound
+        # of 2 is loose but valid)
+        assert float(jnp.max(jnp.abs(ds) - jnp.abs(dt))) <= 1e-6
+
+
+def test_tree_update():
+    tree_w = {"a": jnp.ones((4, 4)), "b": jnp.zeros((3,))}
+    tree_t = {"a": jnp.zeros((4, 4)), "b": jnp.ones((3,))}
+    tree_g = {"a": jnp.ones((4, 4)) * 0.1, "b": jnp.ones((3,)) * -0.2}
+    out = ops.prox_update_tree(tree_w, tree_t, tree_g, 1.0, 0.01, 0.02)
+    ra = ref.prox_update_ref(tree_w["a"], tree_t["a"], tree_g["a"],
+                             1.0, 0.01, 0.02)
+    np.testing.assert_allclose(out["a"], ra)

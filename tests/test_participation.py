@@ -1,0 +1,69 @@
+"""Partial-participation schedules (Setup VI.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import participation
+
+
+def test_uniform_selects_rho_m():
+    m, rho = 20, 0.3
+    key = jax.random.PRNGKey(0)
+    mask = participation.sample_uniform(key, m, rho)
+    assert int(mask.sum()) == 6
+
+
+def test_uniform_is_uniform():
+    m, rho = 10, 0.5
+    counts = np.zeros(m)
+    for i in range(400):
+        counts += np.asarray(
+            participation.sample_uniform(jax.random.PRNGKey(i), m, rho))
+    freq = counts / 400
+    assert np.all(np.abs(freq - rho) < 0.1)
+
+
+def test_coverage_guarantees_window():
+    """Every client selected at least once per s0-round window => max gap
+    < 2*s0 (eq. (30))."""
+    m, rho, s0 = 12, 0.5, 4
+    key = jax.random.PRNGKey(7)
+    T = 40
+    masks = jnp.stack([
+        participation.sample_coverage(key, m, rho, jnp.asarray(t), s0)
+        for t in range(T)])
+    masks_np = np.asarray(masks)
+    # window coverage: rounds [w*s0, (w+1)*s0) cover [m]
+    for w in range(T // s0):
+        assert masks_np[w * s0:(w + 1) * s0].any(axis=0).all()
+    gap = float(participation.max_selection_gap(masks))
+    assert gap < 2 * s0 + 1
+
+
+def test_coverage_respects_rho():
+    m, rho, s0 = 12, 0.5, 4
+    mask = participation.sample_coverage(jax.random.PRNGKey(0), m, rho,
+                                         jnp.asarray(3), s0)
+    assert int(mask.sum()) == 6
+
+
+def test_coverage_rejects_infeasible():
+    with pytest.raises(ValueError):
+        participation.sample_coverage(jax.random.PRNGKey(0), 10, 0.05,
+                                      jnp.asarray(0), 2)
+
+
+def test_remark_vi1_probability():
+    """Remark VI.1: p_i = 1 - (1-rho)^{s0} ~ 0.999 for rho=.5, s0=10."""
+    m, rho, s0 = 16, 0.5, 10
+    misses = 0
+    trials = 300
+    for t in range(trials):
+        sel = np.zeros(m, bool)
+        for r in range(s0):
+            key = jax.random.PRNGKey(t * 1000 + r)
+            sel |= np.asarray(participation.sample_uniform(key, m, rho))
+        misses += int((~sel).sum())
+    p_hat = 1.0 - misses / (trials * m)
+    assert p_hat > 0.99
