@@ -1,0 +1,150 @@
+"""Fig. 6 (beyond-paper): straggler robustness of aggregation policies.
+
+Time-to-accuracy under a heavy-tail (Pareto) device fleet: FedEPM and
+SFedAvg each run under three aggregation policies -- sync (wait for every
+selected client), deadline (drop stragglers past a per-round cutoff set at
+the q-th arrival quantile; eq. (22) carry-through for the dropped), and
+over-selection (contact extra clients, aggregate the first ceil(rho*m)
+arrivals). Reported per cell: simulated wall-clock to the paper's
+termination rule (or the round cap), rounds, total bytes moved, stragglers
+dropped. The headline systems claim: under heavy-tail compute jitter the
+straggler-mitigating policies reach the same objective in a fraction of
+sync's simulated time at (near-)identical byte cost.
+
+Rows: fig6/<alg>/<policy>/time,<sim_seconds * 1e6>,<derived>.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_logreg import termination_reached
+from repro.core import baselines, fedepm
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.sim import (
+    FedSim,
+    SimConfig,
+    client_work_flops,
+    make_latency_model,
+    make_profiles,
+    round_arrivals,
+    tree_client_bytes,
+)
+
+POLICIES = ("sync", "deadline", "overselect")
+ALGS = ("fedepm", "sfedavg")
+
+
+def _calibrate_deadline(profiles, latency_kind, alpha, work, down_b, up_b,
+                        q: float = 0.8, draws: int = 200,
+                        seed: int = 123) -> float:
+    """Deadline = q-quantile of simulated arrival times (a server would set
+    this from observed report latencies)."""
+    rng = np.random.default_rng(seed)
+    lat = make_latency_model(latency_kind, alpha=alpha)
+    samples = [round_arrivals(profiles, rng, lat, work_flops=work,
+                              down_bytes=down_b, up_bytes=up_b)
+               for _ in range(draws)]
+    t = np.concatenate(samples)
+    return float(np.quantile(t[np.isfinite(t)], q))
+
+
+def _build(alg, policy, *, m, k0, rho, d, n, seed, deadline, alpha, batches,
+           loss):
+    key = jax.random.PRNGKey(seed)
+    w0 = jnp.zeros(n)
+    if alg == "fedepm":
+        cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0,
+                                                 eps_dp=0.0)
+        state = fedepm.init_state(key, w0, cfg)
+    else:
+        cfg = baselines.BaselineConfig(m=m, k0=k0, rho=rho, eps_dp=0.0)
+        state = baselines.init_state(key, w0, cfg)
+    sim_cfg = SimConfig(policy=policy,
+                        deadline=deadline if policy == "deadline"
+                        else math.inf,
+                        overselect_factor=1.5, latency="pareto",
+                        latency_alpha=alpha, seed=seed)
+    profiles = make_profiles(m, seed=seed)
+    return FedSim(alg=alg, cfg=cfg, state=state, batches=batches,
+                  loss_fn=loss, profiles=profiles, sim=sim_cfg)
+
+
+def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
+        rounds: int = 80, n: int = 14, seed: int = 0, alpha: float = 1.2):
+    X, y = synth.adult_like(d=d, n=n, seed=seed)
+    batches = jax.tree_util.tree_map(
+        jnp.asarray, partition_iid(X, y, m=m, seed=seed))
+    loss = make_logistic_loss()
+    fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
+    gsq = jax.jit(lambda w: fedepm.global_grad_sq_norm(loss, w, batches))
+
+    profiles = make_profiles(m, seed=seed)
+    down_b = float(tree_client_bytes(jnp.zeros(n)))  # the broadcast w tree
+    # calibrate the cutoff PER ALGORITHM: SFedAvg does ~k0x FedEPM's work
+    # per round, so a FedEPM-calibrated deadline would drop most SFedAvg
+    # clients and skew the cross-policy comparison
+    deadlines = {
+        alg: _calibrate_deadline(
+            profiles, "pareto", alpha,
+            client_work_flops(alg, k0=k0, n_params=n, d_local=d / m),
+            down_b, down_b)
+        for alg in ALGS}
+
+    rows = []
+    results: dict[tuple, dict] = {}
+    for alg in ALGS:
+        deadline = deadlines[alg]
+        for policy in POLICIES:
+            sim = _build(alg, policy, m=m, k0=k0, rho=rho, d=d, n=n,
+                         seed=seed, deadline=deadline, alpha=alpha,
+                         batches=batches, loss=loss)
+            f_hist: list[float] = []
+            for _ in range(rounds):
+                sim.step()
+                f_hist.append(float(fobj(sim.state.w_tau)))
+                # the paper's variance criterion fires spuriously on the
+                # flat first rounds (w_tau barely moves while uploads warm
+                # up, especially under heavy drops) -- require a real
+                # history before trusting it
+                if len(f_hist) >= 8 and termination_reached(
+                        f_hist, float(gsq(sim.state.w_tau)), n):
+                    break
+            res = {
+                "f": f_hist[-1] / m, "rounds": len(f_hist),
+                "sim_time": sim.t, "bytes": sim.ledger.total,
+                "dropped": sum(mm.n_dropped for mm in sim.metrics),
+            }
+            results[(alg, policy)] = res
+            rows.append((
+                f"fig6/{alg}/{policy}/time", res["sim_time"] * 1e6,
+                f"f={res['f']:.5f};rounds={res['rounds']};"
+                f"bytes={res['bytes']:.0f};dropped={res['dropped']}"))
+
+    # headline: straggler mitigation beats sync on simulated wall-clock at
+    # (near-)equal objective; value is the SPEEDUP FACTOR (>1 = faster)
+    for alg in ALGS:
+        sync_t = results[(alg, "sync")]["sim_time"]
+        best = min(results[(alg, p)]["sim_time"]
+                   for p in ("deadline", "overselect"))
+        spread = max(results[(alg, p)]["f"] for p in POLICIES) \
+            - min(results[(alg, p)]["f"] for p in POLICIES)
+        rows.append((f"fig6/{alg}/speedup_vs_sync",
+                     0.0 if best == 0 else sync_t / best,
+                     f"sync={sync_t:.4g}s;best={best:.4g}s;"
+                     f"f_spread={spread:.2e}"))
+    for alg in ALGS:
+        rows.append((f"fig6/{alg}/deadline_calibrated_s",
+                     deadlines[alg] * 1e6,
+                     f"q80_arrival={deadlines[alg]:.4g}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -23,7 +23,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (ens_kernel, fig2_accuracy, fig3_k0, fig4_rho,
-                            fig5_privacy, table1_lct)
+                            fig5_privacy, fig6_stragglers, table1_lct)
 
     d = 4000 if args.quick else 45222
     trials = 1 if args.quick else (3 if not args.full else 10)
@@ -44,6 +44,9 @@ def main(argv=None):
             else (0.1, 0.3, 0.5, 0.7, 0.9)),
         "ens": lambda: ens_kernel.run(
             n=(1 << 12) if args.quick else (1 << 16)),
+        "fig6": lambda: fig6_stragglers.run(
+            d=d, m=16 if args.quick else 32,
+            rounds=30 if args.quick else 80),
     }
     if args.only:
         keep = set(args.only.split(","))

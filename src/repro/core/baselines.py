@@ -70,6 +70,16 @@ def init_state(key: jax.Array, params0: Params, cfg: BaselineConfig) -> Baseline
                          k=jnp.asarray(0, jnp.int32), key=key)
 
 
+def default_round_mask(state: BaselineState, cfg: BaselineConfig) -> jax.Array:
+    """The mask sfedavg_round/sfedprox_round would draw for ``state``.
+
+    Mirrors the rounds' key split so the systems runtime (repro.sim) can
+    supply arrival-aware masks that degrade gracefully to the internal
+    selection (same key stream => bit-identical trajectories)."""
+    _, k_sel, _ = jax.random.split(state.key, 3)
+    return sample_uniform(k_sel, cfg.m, cfg.rho)
+
+
 def _gamma(cfg: BaselineConfig, k):
     """Eq. (38): gamma = gamma_scale * d_i / sqrt(2 k0 + tau_k)."""
     tau = (k // cfg.k0).astype(jnp.float32)
@@ -103,10 +113,14 @@ def _noisy_upload(k_noise, W_upd, g, mask, cfg: BaselineConfig, k):
 
 
 def sfedavg_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
-                  cfg: BaselineConfig):
-    """k0 iterations of SFedAvg (Algorithm 3 + eq. (35))."""
+                  cfg: BaselineConfig, mask: jax.Array | None = None):
+    """k0 iterations of SFedAvg (Algorithm 3 + eq. (35)).
+
+    ``mask`` optionally supplies the participation set externally (see
+    fedepm.fedepm_round); the key split is unchanged either way."""
     key, k_sel, k_noise = jax.random.split(state.key, 3)
-    mask = sample_uniform(k_sel, cfg.m, cfg.rho)
+    if mask is None:
+        mask = sample_uniform(k_sel, cfg.m, cfg.rho)
     w_new = _aggregate_selected_mean(state.Z, mask)
     grad_fn = jax.grad(loss_fn)
 
@@ -135,10 +149,14 @@ def sfedavg_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
 
 
 def sfedprox_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
-                   cfg: BaselineConfig):
-    """k0 iterations of SFedProx (Algorithm 3 + (36), inner solver Alg. 4)."""
+                   cfg: BaselineConfig, mask: jax.Array | None = None):
+    """k0 iterations of SFedProx (Algorithm 3 + (36), inner solver Alg. 4).
+
+    ``mask`` optionally supplies the participation set externally (see
+    fedepm.fedepm_round); the key split is unchanged either way."""
     key, k_sel, k_noise = jax.random.split(state.key, 3)
-    mask = sample_uniform(k_sel, cfg.m, cfg.rho)
+    if mask is None:
+        mask = sample_uniform(k_sel, cfg.m, cfg.rho)
     w_new = _aggregate_selected_mean(state.Z, mask)
     grad_fn = jax.grad(loss_fn)
 

@@ -117,6 +117,17 @@ def _select(key, cfg: FedEPMConfig, round_idx):
     raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
 
+def default_round_mask(state: FedEPMState, cfg: FedEPMConfig) -> jax.Array:
+    """The mask ``fedepm_round`` would draw for ``state`` this round.
+
+    Replicates the round's key split so an external scheduler (repro.sim)
+    can reproduce the internal selection exactly: supplying this mask via
+    ``fedepm_round(..., mask=...)`` yields bit-identical trajectories.
+    """
+    _, k_sel, _ = jax.random.split(state.key, 3)
+    return _select(k_sel, cfg, state.k // cfg.k0)
+
+
 def _client_inner(wi, w_new, gi, k_start, cfg: FedEPMConfig):
     """k0 closed-form prox iterations (20) for ONE client. Returns (wi, mu_last)."""
 
@@ -134,15 +145,23 @@ def _client_inner(wi, w_new, gi, k_start, cfg: FedEPMConfig):
 
 
 def fedepm_round(state: FedEPMState, batches: Batch, loss_fn: LossFn,
-                 cfg: FedEPMConfig):
+                 cfg: FedEPMConfig, mask: jax.Array | None = None):
     """One communication round = k0 iterations of Algorithm 2.
 
     ``batches`` is a pytree with a leading client axis m (each client's local
     data or minibatch). Returns (new_state, RoundMetrics).
+
+    ``mask`` optionally supplies the participation set externally (shape (m,)
+    bool) -- used by the systems runtime (repro.sim) where selection is a
+    function of simulated arrival times. The key split is unchanged whether
+    or not a mask is given, so passing ``default_round_mask(state, cfg)``
+    reproduces the internal selection bit-for-bit. Non-selected clients
+    carry state through either way, eq. (22).
     """
     key, k_sel, k_noise = jax.random.split(state.key, 3)
     round_idx = state.k // cfg.k0
-    mask = _select(k_sel, cfg, round_idx)
+    if mask is None:
+        mask = _select(k_sel, cfg, round_idx)
 
     # ---- server: aggregate uploads via ENS (19) and broadcast ----
     w_new = ens_ops.ens_tree(state.Z, cfg.lam, cfg.eta, impl=cfg.ens_impl)

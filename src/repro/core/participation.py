@@ -58,6 +58,32 @@ def sample_coverage(key: jax.Array, m: int, rho: float, round_idx,
     return mask
 
 
+def arrival_mask(candidates: jax.Array, arrivals: jax.Array,
+                 deadline) -> jax.Array:
+    """Deadline aggregation: keep candidates whose simulated arrival time is
+    within ``deadline`` (seconds of simulated round time). Dropped stragglers
+    carry state through via eq. (22) -- the round functions' masked update.
+
+    candidates: (m,) bool; arrivals: (m,) float (inf = never arrives; an
+    offline client is dropped even under an infinite deadline).
+    """
+    return candidates & jnp.isfinite(arrivals) & (arrivals <= deadline)
+
+
+def first_arrivals_mask(candidates: jax.Array, arrivals: jax.Array,
+                        n_keep: int) -> jax.Array:
+    """Over-selection: of the contacted ``candidates``, keep the ``n_keep``
+    earliest finite arrivals (ties broken by client index, the argsort
+    order). Fewer than n_keep finite arrivals => keep all that arrived.
+
+    candidates: (m,) bool; arrivals: (m,) float. jit-safe.
+    """
+    t = jnp.where(candidates, arrivals, jnp.inf)
+    order = jnp.argsort(t)                    # stable: ties by client index
+    rank = jnp.argsort(order)                 # rank[i] = position of i
+    return (rank < n_keep) & jnp.isfinite(t)
+
+
 def max_selection_gap(masks: jax.Array) -> jax.Array:
     """Diagnostic for eq. (30): masks (T, m) -> max gap u - v between
     CONSECUTIVE selections of any client (first selection measured from

@@ -1,0 +1,29 @@
+"""Public entry points for the upload-codec quantizer with impl dispatch."""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+
+from repro.kernels.quant import ref as _ref
+from repro.kernels.quant.quant import quantize_pallas
+
+Impl = Literal["pallas", "ref"]
+
+
+def quantize(X: jax.Array, scale: jax.Array, bits: int,
+             u32: jax.Array | None = None, *, impl: Impl = "ref",
+             block_n: int = 512, interpret: bool | None = None) -> jax.Array:
+    """Row-wise uniform (stochastic) quantize-dequantize.
+
+    X: (m, n) values; scale: (m,) per-row magnitude bound; bits: wire bits
+    per coordinate (>= 2); u32: optional (m, n) uint32 dither -- present =>
+    unbiased stochastic rounding, absent => deterministic round-half-up.
+    Returns grid-snapped values in X.dtype.
+    """
+    if impl == "pallas":
+        return quantize_pallas(X, scale, bits, u32, block_n=block_n,
+                               interpret=interpret)
+    if impl == "ref":
+        return _ref.quantize_ref(X, scale, bits, u32)
+    raise ValueError(f"unknown quant impl {impl!r}")

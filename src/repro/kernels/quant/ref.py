@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for uniform stochastic quantization (upload codec).
+
+Per row i of X (a client's kept coordinates), values are snapped to the
+uniform grid {j * delta_i : j in [-L, L]} with
+
+    delta_i = scale_i / L,    L = 2^(bits-1) - 1,
+
+so a row whose magnitudes are bounded by scale_i round-trips into ``bits``
+bits per coordinate (sign + magnitude level).
+
+Rounding:
+
+  * stochastic (``u`` given): q = floor(x/delta + u), u ~ U[0,1) -- the
+    classic unbiased dither: E[q*delta] = x for |x| <= L*delta.
+  * deterministic (``u`` None): q = floor(x/delta + 1/2) (round-half-up),
+    which keeps |q*delta - x| <= delta/2.
+
+The random bits are SUPPLIED by the caller (uint32, same shape as X) rather
+than drawn in-kernel, so the Pallas kernel and this reference consume the
+identical dither and must agree bit-for-bit -- that is what the kernel test
+asserts. Returns the DEQUANTIZED values (grid points, x.dtype); the byte
+ledger (repro.sim.transport) accounts the wire size as bits/8 per kept
+coordinate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INV_2_32 = float(2.0 ** -32)
+
+
+def quant_levels(bits: int) -> int:
+    """L = 2^(bits-1) - 1 grid steps each side of zero."""
+    if bits < 2:
+        raise ValueError(f"need bits >= 2 (sign + >=1 magnitude bit); got {bits}")
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_ref(X: jax.Array, scale: jax.Array, bits: int,
+                 u32: jax.Array | None = None) -> jax.Array:
+    """Quantize-dequantize X (m, n) row-wise. scale: (m,); u32: (m, n) or None.
+
+    Rows with scale <= 0 (all-zero rows) quantize to exact zeros.
+    """
+    L = quant_levels(bits)
+    x = X.astype(jnp.float32)
+    s = scale.astype(jnp.float32).reshape(-1, 1)
+    # multiply by the precomputed reciprocal rather than divide by L: XLA
+    # folds div-by-constant into mul-by-reciprocal inside jit (the Pallas
+    # path) but not outside, which would break the bit-for-bit kernel/ref
+    # contract by 1 ulp of delta
+    delta = s * (1.0 / L)
+    safe = jnp.where(delta > 0, delta, 1.0)
+    if u32 is None:
+        u = 0.5
+    else:
+        u = u32.astype(jnp.float32) * _INV_2_32
+    q = jnp.floor(x / safe + u)
+    q = jnp.clip(q, -L, L)
+    out = jnp.where(delta > 0, q * safe, 0.0)
+    return out.astype(X.dtype)

@@ -1,0 +1,23 @@
+"""Federated systems runtime: straggler simulation, deadline aggregation,
+and a byte-accurate communication ledger around the core round functions."""
+from repro.sim.clients import (          # noqa: F401
+    ClientProfiles,
+    make_latency_model,
+    make_profiles,
+    round_arrivals,
+    uniform_profiles,
+)
+from repro.sim.server import (           # noqa: F401
+    FedSim,
+    SimConfig,
+    SimMetrics,
+    client_work_flops,
+)
+from repro.sim.transport import (        # noqa: F401
+    ByteLedger,
+    CodecConfig,
+    codec_roundtrip,
+    encoded_client_bytes,
+    stacked_client_bytes,
+    tree_client_bytes,
+)

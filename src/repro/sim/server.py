@@ -1,0 +1,293 @@
+"""Event-driven federated server simulation: aggregation over simulated time.
+
+Wraps the UNMODIFIED round functions (core.fedepm.fedepm_round and the
+core.baselines rounds) in a client/server timing model: each round the
+server contacts a candidate set, clients.round_arrivals draws per-client
+completion times from the device profiles, and an aggregation POLICY turns
+arrivals into (participation mask, simulated round duration):
+
+  sync        -- wait for every contacted available client; round time is
+                 the slowest arrival (stragglers gate the round).
+  deadline    -- drop candidates past a wall-clock cutoff; dropped clients
+                 carry state through exactly as the paper's eq. (22)
+                 non-selected clients do (the mask hook reuses the same
+                 tree_where_client carry path). Round time is the deadline
+                 when anyone misses it, else the slowest arrival.
+  overselect  -- contact a uniform candidate set drawn at rate rho*factor
+                 (the sampler's |S| = round(rho*factor*m) convention),
+                 aggregate the first ceil(rho*m) arrivals; round time is
+                 the last kept arrival.
+
+The mask is fed into the round via ``fedepm_round(..., mask=...)`` -- the
+selection key stream is unchanged, so with policy="sync", full availability,
+deterministic latency and no codec the simulated trajectory is BIT-FOR-BIT
+the one core.fedepm produces on its own (tests/test_sim.py asserts this).
+
+A round in which no candidate reports before the cutoff is ABANDONED: the
+algorithm state is untouched (no key advance -- the server never aggregated),
+the wasted broadcast bytes are still charged, and simulated time advances to
+the deadline-policy cutoff, matching min-report-count behaviour of
+production FL servers. (A sync round with every contacted client offline
+has no cutoff to wait for and costs zero simulated time.)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, fedepm, participation
+from repro.core.treeutil import tree_size, tree_where_client
+from repro.sim import clients as simclients
+from repro.sim.transport import (
+    ByteLedger,
+    CodecConfig,
+    codec_roundtrip,
+    encoded_client_bytes,
+    tree_client_bytes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    policy: str = "sync"            # "sync" | "deadline" | "overselect"
+    deadline: float = math.inf      # seconds, deadline policy cutoff
+    overselect_factor: float = 1.5  # candidate draw rate = rho * factor
+    latency: str = "deterministic"  # clients.make_latency_model kind
+    latency_sigma: float = 0.5
+    latency_alpha: float = 1.2
+    seed: int = 0
+    codec: CodecConfig | None = None
+
+
+class SimMetrics(NamedTuple):
+    round_idx: int
+    t_round: float       # simulated duration of this round (s)
+    t_total: float       # cumulative simulated wall-clock (s)
+    n_contacted: int     # candidates the server broadcast to
+    n_aggregated: int    # uploads that made it into the aggregate
+    n_dropped: int       # contacted but not aggregated (stragglers/offline)
+    bytes_down: float
+    bytes_up: float
+    abandoned: bool      # nobody reported before the cutoff
+
+
+def client_work_flops(alg: str, *, k0: int, n_params: int, d_local: float,
+                      prox_ell: int = 3) -> float:
+    """Rough per-round client compute model (flops), for arrival times only.
+
+    One loss gradient over d_local samples of an n_params model is ~4
+    flops/sample/param (forward + backward matvec); FedEPM adds k0 cheap
+    closed-form prox steps (~12 flops/param incl. the mu norm), the
+    baselines re-evaluate the gradient every inner step (eqs. (35)/(36)).
+    """
+    grad = 4.0 * d_local * n_params
+    if alg == "fedepm":
+        return grad + k0 * 12.0 * n_params
+    if alg == "sfedavg":
+        return k0 * grad
+    if alg == "sfedprox":
+        return k0 * prox_ell * grad
+    raise ValueError(f"unknown alg {alg!r}")
+
+
+def _batches_d_local(batches) -> float:
+    """Mean per-client sample count, from the validity mask when present."""
+    if isinstance(batches, dict) and "mask" in batches:
+        msk = np.asarray(batches["mask"])
+        return float(msk.reshape(msk.shape[0], -1).sum(axis=1).mean())
+    leaves = jax.tree_util.tree_leaves(batches)
+    return float(leaves[0].shape[1]) if leaves and leaves[0].ndim > 1 else 1.0
+
+
+_ALGS: dict[str, tuple[Callable, Callable]] = {
+    "fedepm": (fedepm.fedepm_round, fedepm.default_round_mask),
+    "sfedavg": (baselines.sfedavg_round, baselines.default_round_mask),
+    "sfedprox": (baselines.sfedprox_round, baselines.default_round_mask),
+}
+
+
+class FedSim:
+    """Drives one algorithm under one aggregation policy over simulated time.
+
+    Parameters
+    ----------
+    alg : "fedepm" | "sfedavg" | "sfedprox"
+    cfg : the algorithm's own config (FedEPMConfig / BaselineConfig) --
+          the sim never alters it, so the math stays core/'s.
+    state : initial algorithm state (init_state of the respective module).
+    batches, loss_fn : as taken by the round functions.
+    profiles : device heterogeneity (clients.make_profiles); default uniform.
+    sim : SimConfig policy/latency/codec settings.
+    work_flops : override the per-round client compute estimate.
+    """
+
+    def __init__(self, *, alg: str, cfg: Any, state: Any, batches: Any,
+                 loss_fn: Callable, profiles=None,
+                 sim: SimConfig = SimConfig(),
+                 work_flops: float | None = None):
+        if alg not in _ALGS:
+            raise ValueError(f"unknown alg {alg!r}")
+        round_fn, mask_fn = _ALGS[alg]
+        self.alg = alg
+        self.cfg = cfg
+        self.sim = sim
+        self.state = state
+        self.profiles = profiles if profiles is not None \
+            else simclients.uniform_profiles(cfg.m)
+        if self.profiles.m != cfg.m:
+            raise ValueError(
+                f"profiles for m={self.profiles.m} but cfg.m={cfg.m}")
+        self._latency = simclients.make_latency_model(
+            sim.latency, sigma=sim.latency_sigma, alpha=sim.latency_alpha)
+        self._rng = np.random.default_rng(sim.seed)
+        self._codec_key = jax.random.PRNGKey(sim.seed ^ 0x5EED)
+
+        self._step = jax.jit(
+            lambda s, mask: round_fn(s, batches, loss_fn, cfg, mask))
+        self._default_mask = jax.jit(lambda s: mask_fn(s, cfg))
+        if sim.policy == "overselect":
+            # over-selection draws its own (bigger) uniform candidate set;
+            # a coverage/full sampler's guarantee would be silently lost,
+            # so refuse rather than mislead
+            if getattr(cfg, "sampler", "uniform") != "uniform":
+                raise ValueError(
+                    "policy='overselect' only supports the uniform sampler; "
+                    f"got cfg.sampler={cfg.sampler!r}")
+            rho_eff = min(1.0, cfg.rho * sim.overselect_factor)
+
+            def cand(s):
+                _, k_sel, _ = jax.random.split(s.key, 3)
+                return participation.sample_uniform(k_sel, cfg.m, rho_eff)
+
+            self._candidates = jax.jit(cand)
+        else:
+            self._candidates = self._default_mask
+        self._n_keep = min(cfg.m, max(1, math.ceil(cfg.rho * cfg.m)))
+
+        # byte model from the real state trees
+        self._down_bytes = float(tree_client_bytes(state.w_tau))
+        self._up_bytes = float(encoded_client_bytes(state.Z, sim.codec))
+        self.ledger = ByteLedger(cfg.m)
+
+        if sim.codec is not None:
+            codec = sim.codec
+
+            @jax.jit
+            def codec_merge(z_new, z_prev, mask, key):
+                z_dec = codec_roundtrip(z_new, z_prev, key, codec)
+                return tree_where_client(mask, z_dec, z_prev)
+
+            self._codec_merge = codec_merge
+
+        self._work = work_flops if work_flops is not None else \
+            client_work_flops(alg, k0=cfg.k0,
+                              n_params=tree_size(state.w_tau),
+                              d_local=_batches_d_local(batches))
+        self.t = 0.0
+        self.round_idx = 0
+        self.metrics: list[SimMetrics] = []
+        self.last_round_metrics = None  # algorithm RoundMetrics of last round
+
+    @property
+    def up_bytes_per_client(self) -> float:
+        """Encoded uplink wire bytes one client sends per round."""
+        return self._up_bytes
+
+    @property
+    def down_bytes_per_client(self) -> float:
+        """Dense broadcast wire bytes one contacted client receives."""
+        return self._down_bytes
+
+    # -- policy -------------------------------------------------------------
+
+    def _apply_policy(self, candidates: np.ndarray, arrivals: np.ndarray):
+        """-> (mask (m,) bool, round duration seconds).
+
+        Mask semantics live in core.participation (arrival_mask /
+        first_arrivals_mask) so the jit-safe helpers and the sim cannot
+        drift; only the round-duration bookkeeping is computed here.
+        """
+        pol = self.sim.policy
+        cand_j = jnp.asarray(candidates)
+        arr_j = jnp.asarray(arrivals)
+        t_cand = np.where(candidates, arrivals, np.inf)
+        if pol == "sync":
+            # wait for every contacted client that is alive; an all-offline
+            # round has no natural duration (sync has no cutoff) => 0.0
+            mask = np.asarray(participation.arrival_mask(
+                cand_j, arr_j, np.inf))
+            dur = float(t_cand[mask].max()) if mask.any() else 0.0
+            return mask, dur
+        if pol == "deadline":
+            dl = self.sim.deadline
+            mask = np.asarray(participation.arrival_mask(cand_j, arr_j, dl))
+            if not candidates.any():
+                return mask, 0.0
+            finite = t_cand[np.isfinite(t_cand)]
+            if np.isfinite(t_cand[candidates]).all() \
+                    and (t_cand[candidates] <= dl).all():
+                return mask, float(t_cand[candidates].max())  # all beat it
+            if np.isfinite(dl):                     # someone missed it
+                return mask, float(dl)
+            # infinite deadline but offline candidates: wait out the finite
+            return mask, float(finite.max()) if finite.size else 0.0
+        if pol == "overselect":
+            mask = np.asarray(participation.first_arrivals_mask(
+                cand_j, arr_j, self._n_keep))
+            dur = float(t_cand[mask].max()) if mask.any() else 0.0
+            return mask, dur
+        raise ValueError(f"unknown policy {pol!r}")
+
+    # -- one simulated round ------------------------------------------------
+
+    def step(self) -> SimMetrics:
+        candidates = np.asarray(self._candidates(self.state))
+        arrivals = simclients.round_arrivals(
+            self.profiles, self._rng, self._latency,
+            work_flops=self._work, down_bytes=self._down_bytes,
+            up_bytes=self._up_bytes)
+        mask, dur = self._apply_policy(candidates, arrivals)
+
+        abandoned = candidates.any() and not mask.any()
+        if abandoned:
+            # server waited out the round (dur from the policy) and nobody
+            # reported: algorithm state untouched, broadcast bytes spent
+            rec_up = np.zeros(self.cfg.m, bool)
+        else:
+            prev_state = self.state
+            new_state, rmetrics = self._step(
+                self.state, jnp.asarray(mask))
+            if self.sim.codec is not None:
+                key = jax.random.fold_in(self._codec_key, self.round_idx)
+                new_state = new_state._replace(Z=self._codec_merge(
+                    new_state.Z, prev_state.Z, jnp.asarray(mask), key))
+            self.state = new_state
+            self.last_round_metrics = rmetrics
+            # uploads that completed within the round window (kept clients
+            # plus over-selection ties); stragglers cut at the deadline
+            # never finish their upload, offline clients never start one
+            rec_up = np.asarray(candidates & np.isfinite(arrivals)
+                                & (arrivals <= dur + 1e-12))
+
+        brec = self.ledger.record_round(
+            down_mask=candidates, up_mask=rec_up,
+            down_bytes=self._down_bytes, up_bytes=self._up_bytes)
+        self.t += dur
+        m = SimMetrics(
+            round_idx=self.round_idx, t_round=dur, t_total=self.t,
+            n_contacted=int(candidates.sum()),
+            n_aggregated=int(mask.sum()),
+            n_dropped=int(candidates.sum()) - int(mask.sum()),
+            bytes_down=brec["down"], bytes_up=brec["up"],
+            abandoned=bool(abandoned))
+        self.metrics.append(m)
+        self.round_idx += 1
+        return m
+
+    def run(self, rounds: int) -> list[SimMetrics]:
+        return [self.step() for _ in range(rounds)]

@@ -1,0 +1,192 @@
+"""Byte-accurate communication accounting and the optional upload codec.
+
+Byte ledger
+-----------
+Wire sizes are derived from the REAL pytree leaf dtypes/shapes of the state
+being exchanged (not a hand-waved parameter count): the server->client
+broadcast moves one dense copy of w^{tau+1} per contacted client, the
+client->server upload moves one (possibly encoded) copy of z_i per client
+whose upload completed within the round. ``ByteLedger`` accumulates both
+per round and per client, host-side.
+
+Upload codec (top-k sparsification + uniform stochastic quantization)
+---------------------------------------------------------------------
+``codec_roundtrip`` models what the server RECEIVES when clients compress
+uploads: per leaf, each client keeps the top ceil(topk_frac * n) coordinates
+by magnitude, snaps the kept values onto a ``bits``-bit uniform grid
+(repro.kernels.quant -- Pallas kernel with a bit-identical jnp reference),
+and the server dequantizes BEFORE aggregation, substituting the client's
+previous upload z_i^{tau-1} on dropped coordinates. ENS then runs on dense
+dequantized uploads, so compressed FedEPM keeps the aggregation math of
+core/fedepm.py unchanged: with bits=0 the kept coordinates are transmitted
+exactly, and with topk_frac=1, bits=0 the codec is the identity. Dropped
+coordinates are a per-coordinate analogue of the paper's eq. (22)
+carry-through (the server reuses the stalest value it holds).
+
+Wire format accounted per client per leaf (n coords, k kept):
+    dense  (k == n):  n * bits/8 payload + 4 B scale
+    sparse (k <  n):  k * bits/8 payload + k * index_bytes + 4 B scale
+with bits=0 meaning raw leaf-dtype values (no scale overhead when dense).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.quant import ops as quant_ops
+
+tmap = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+
+def tree_client_bytes(tree) -> int:
+    """Dense wire bytes of ONE client's pytree (leaves without client axis)."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def stacked_client_bytes(tree) -> int:
+    """Dense wire bytes of ONE client's slice of a stacked (m, ...) pytree."""
+    return sum((x.size // x.shape[0]) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecConfig:
+    """Upload compression: keep top-k by magnitude, quantize kept values.
+
+    topk_frac: fraction of each leaf's coordinates kept (1.0 = dense).
+    bits: wire bits per kept value (>= 2), or 0 to send kept values raw.
+    stochastic: unbiased dithered rounding (True) vs round-half-up.
+    impl: quantizer implementation, "ref" (jnp) or "pallas".
+    index_bytes: per-kept-coordinate index cost when sparse (k < n).
+    """
+
+    topk_frac: float = 1.0
+    bits: int = 8
+    stochastic: bool = True
+    impl: str = "ref"
+    index_bytes: int = 4
+
+    def __post_init__(self):
+        if not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError(f"topk_frac must be in (0, 1]; got {self.topk_frac}")
+        if self.bits != 0 and self.bits < 2:
+            raise ValueError(f"bits must be 0 (raw) or >= 2; got {self.bits}")
+
+
+def _leaf_k(n: int, frac: float) -> int:
+    return n if frac >= 1.0 else max(1, math.ceil(frac * n))
+
+
+def encoded_client_bytes(tree, codec: CodecConfig | None) -> float:
+    """Wire bytes of ONE client's (possibly encoded) upload of a stacked tree."""
+    if codec is None:
+        return float(stacked_client_bytes(tree))
+    total = 0.0
+    for x in jax.tree_util.tree_leaves(tree):
+        n = x.size // x.shape[0]
+        k = _leaf_k(n, codec.topk_frac)
+        payload = k * (codec.bits / 8.0 if codec.bits else x.dtype.itemsize)
+        index = 0.0 if k == n else k * codec.index_bytes
+        scale = 4.0 if codec.bits else (0.0 if k == n else 4.0)
+        total += payload + index + scale
+    return total
+
+
+class ByteLedger:
+    """Per-round, per-client cumulative communication record (host-side)."""
+
+    def __init__(self, m: int):
+        self.m = m
+        self.up = np.zeros(m)        # cumulative uplink bytes per client
+        self.down = np.zeros(m)      # cumulative downlink bytes per client
+        self.rounds: list[dict] = []
+
+    def record_round(self, *, down_mask: np.ndarray, up_mask: np.ndarray,
+                     down_bytes: float, up_bytes) -> dict:
+        """down_mask: clients the server contacted (they receive the
+        broadcast); up_mask: clients whose upload completed; up_bytes:
+        scalar or (m,) per-client encoded size."""
+        down_mask = np.asarray(down_mask, bool)
+        up_mask = np.asarray(up_mask, bool)
+        up_pc = np.broadcast_to(np.asarray(up_bytes, np.float64), (self.m,))
+        d = np.where(down_mask, float(down_bytes), 0.0)
+        u = np.where(up_mask, up_pc, 0.0)
+        self.down += d
+        self.up += u
+        rec = {"round": len(self.rounds), "down": float(d.sum()),
+               "up": float(u.sum()), "n_down": int(down_mask.sum()),
+               "n_up": int(up_mask.sum())}
+        self.rounds.append(rec)
+        return rec
+
+    @property
+    def total_up(self) -> float:
+        return float(self.up.sum())
+
+    @property
+    def total_down(self) -> float:
+        return float(self.down.sum())
+
+    @property
+    def total(self) -> float:
+        return self.total_up + self.total_down
+
+
+# ---------------------------------------------------------------------------
+# codec round-trip (what the server holds after dequantization)
+# ---------------------------------------------------------------------------
+
+def _roundtrip_leaf(z, fallback, key, codec: CodecConfig):
+    """One stacked leaf (m, ...) -> decoded (m, ...)."""
+    m = z.shape[0]
+    shape = z.shape
+    zf = z.reshape(m, -1)
+    n = zf.shape[1]
+    k = _leaf_k(n, codec.topk_frac)
+
+    if k < n:
+        mag = jnp.abs(zf.astype(jnp.float32))
+        _, idx = jax.lax.top_k(mag, k)               # (m, k)
+        vals = jnp.take_along_axis(zf, idx, axis=1)  # (m, k)
+    else:
+        idx = None
+        vals = zf
+
+    if codec.bits:
+        scale = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=1)
+        u32 = (jax.random.bits(key, vals.shape, dtype=jnp.uint32)
+               if codec.stochastic else None)
+        vals = quant_ops.quantize(vals, scale, codec.bits, u32,
+                                  impl=codec.impl)
+
+    if idx is None:
+        return vals.reshape(shape)
+    out = jax.vmap(lambda f, i, v: f.at[i].set(v))(
+        fallback.reshape(m, -1), idx, vals)
+    return out.reshape(shape)
+
+
+def codec_roundtrip(tree_z, tree_fallback, key: jax.Array,
+                    codec: CodecConfig | None):
+    """Encode + decode every client's upload; stacked (m, ...) pytrees.
+
+    ``tree_fallback`` supplies dropped coordinates (the server's stale copy,
+    normally the previous round's Z). Identity when codec is None.
+    """
+    if codec is None:
+        return tree_z
+    leaves, treedef = jax.tree_util.tree_flatten(tree_z)
+    fb_leaves = jax.tree_util.tree_leaves(tree_fallback)
+    keys = jax.random.split(key, len(leaves))
+    out = [_roundtrip_leaf(z, fb, kk, codec)
+           for z, fb, kk in zip(leaves, fb_leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,169 @@
+"""Upload-codec quantizer: Pallas (interpret) vs jnp ref, grid/unbiasedness
+properties, and the transport codec round-trip built on top of it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quant import ops, ref
+from repro.sim.transport import CodecConfig, codec_roundtrip, encoded_client_bytes
+
+
+def _data(m, n, seed=0, scale=2.0):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (m, n)) * scale
+    s = jnp.max(jnp.abs(X), axis=1)
+    u32 = jax.random.bits(jax.random.fold_in(key, 1), (m, n),
+                          dtype=jnp.uint32)
+    return X, s, u32
+
+
+@pytest.mark.parametrize("m,n", [(1, 7), (5, 300), (32, 1024), (3, 513)])
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_pallas_matches_ref_bitexact(m, n, bits, stochastic):
+    """Same dither bits => the kernel and the jnp reference must agree
+    EXACTLY (the dither is an input, not drawn in-kernel)."""
+    X, s, u32 = _data(m, n, seed=m * n)
+    u = u32 if stochastic else None
+    qp = ops.quantize(X, s, bits, u, impl="pallas", interpret=True)
+    qr = ops.quantize(X, s, bits, u, impl="ref")
+    assert np.array_equal(np.asarray(qp), np.asarray(qr))
+    assert qp.dtype == X.dtype
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantization_error_bounded(bits):
+    """|q - x| <= delta (stochastic) resp. delta/2 (deterministic)."""
+    X, s, u32 = _data(8, 400, seed=3)
+    L = ref.quant_levels(bits)
+    delta = np.asarray(s)[:, None] / L
+    q_st = np.asarray(ops.quantize(X, s, bits, u32, impl="ref"))
+    q_dt = np.asarray(ops.quantize(X, s, bits, None, impl="ref"))
+    Xn = np.asarray(X)
+    assert (np.abs(q_st - Xn) <= delta * (1 + 1e-6)).all()
+    assert (np.abs(q_dt - Xn) <= delta / 2 + delta * 1e-6).all()
+
+
+def test_values_on_grid():
+    X, s, u32 = _data(4, 200, seed=5)
+    bits = 4
+    L = ref.quant_levels(bits)
+    q = np.asarray(ops.quantize(X, s, bits, u32, impl="ref"), np.float64)
+    delta = (np.asarray(s, np.float64) * np.float32(1.0 / L))[:, None]
+    levels = np.rint(q / delta)
+    np.testing.assert_allclose(levels * delta, q, rtol=1e-6)
+    assert (np.abs(levels) <= L).all()
+
+
+def test_stochastic_rounding_unbiased():
+    """E[q] = x for |x| <= scale: average over many dither draws."""
+    n = 4096
+    X = jnp.full((1, n), 0.37, jnp.float32)
+    s = jnp.ones((1,))
+    means = []
+    for seed in range(40):
+        u32 = jax.random.bits(jax.random.PRNGKey(seed), (1, n),
+                              dtype=jnp.uint32)
+        means.append(float(np.asarray(
+            ops.quantize(X, s, 4, u32, impl="ref")).mean()))
+    assert abs(np.mean(means) - 0.37) < 2e-3
+    # deterministic rounding is biased toward the nearer grid point instead
+    q_dt = float(np.asarray(ops.quantize(X, s, 4, None, impl="ref")).mean())
+    assert abs(q_dt - 0.37) > 5e-3
+
+
+def test_zero_rows_quantize_to_zero():
+    X, _, u32 = _data(4, 64, seed=7)
+    X = X.at[2].set(0.0)
+    s = jnp.max(jnp.abs(X), axis=1)
+    for impl in ("ref", "pallas"):
+        q = np.asarray(ops.quantize(X, s, 8, u32, impl=impl,
+                                    interpret=True))
+        assert (q[2] == 0).all()
+        assert np.isfinite(q).all()
+
+
+def test_bits_validation():
+    X, s, _ = _data(2, 16)
+    with pytest.raises(ValueError):
+        ops.quantize(X, s, 1, None, impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# transport codec round-trip (top-k + quantize + dequantize-with-fallback)
+# ---------------------------------------------------------------------------
+
+def _tree(m, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(key, (m, 6, 8)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (m, 10))}
+
+
+def test_codec_identity_when_disabled():
+    t = _tree(4)
+    out = codec_roundtrip(t, t, jax.random.PRNGKey(0), None)
+    assert out is t
+
+
+def test_codec_dense_lossless_when_raw():
+    """topk_frac=1, bits=0: the codec transmits everything exactly."""
+    t = _tree(4)
+    fb = jax.tree_util.tree_map(jnp.zeros_like, t)
+    out = codec_roundtrip(t, fb, jax.random.PRNGKey(0),
+                          CodecConfig(topk_frac=1.0, bits=0))
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(t)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_codec_topk_exact_on_kept_raw():
+    """bits=0, topk<1: kept (top-magnitude) coords come through exactly,
+    dropped coords take the fallback value."""
+    m = 3
+    t = _tree(m, seed=2)
+    fb = jax.tree_util.tree_map(lambda x: jnp.full_like(x, -7.0), t)
+    frac = 0.25
+    out = codec_roundtrip(t, fb, jax.random.PRNGKey(0),
+                          CodecConfig(topk_frac=frac, bits=0))
+    for o, z in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(t)):
+        of = np.asarray(o).reshape(m, -1)
+        zf = np.asarray(z).reshape(m, -1)
+        n = zf.shape[1]
+        k = max(1, int(np.ceil(frac * n)))
+        for i in range(m):
+            kept = np.argsort(-np.abs(zf[i]))[:k]
+            np.testing.assert_array_equal(of[i, kept], zf[i, kept])
+            dropped = np.setdiff1d(np.arange(n), kept)
+            assert (of[i, dropped] == -7.0).all()
+
+
+def test_codec_quantized_close_and_on_grid():
+    m = 4
+    t = _tree(m, seed=3)
+    fb = jax.tree_util.tree_map(jnp.zeros_like, t)
+    out = codec_roundtrip(t, fb, jax.random.PRNGKey(1),
+                          CodecConfig(topk_frac=1.0, bits=8))
+    L = ref.quant_levels(8)
+    for o, z in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(t)):
+        of, zf = np.asarray(o).reshape(m, -1), np.asarray(z).reshape(m, -1)
+        delta = np.abs(zf).max(axis=1, keepdims=True) / L
+        assert (np.abs(of - zf) <= delta * (1 + 1e-5)).all()
+
+
+def test_encoded_bytes_accounting():
+    m = 2
+    t = {"w": jnp.zeros((m, 100), jnp.float32)}
+    # raw dense = 400 B
+    assert encoded_client_bytes(t, None) == 400.0
+    # dense 8-bit: 100 B payload + 4 B scale
+    assert encoded_client_bytes(t, CodecConfig(topk_frac=1.0, bits=8)) \
+        == 104.0
+    # top-10% 8-bit: 10 B payload + 40 B indices + 4 B scale
+    assert encoded_client_bytes(t, CodecConfig(topk_frac=0.1, bits=8)) \
+        == 54.0
+    # top-10% raw: 40 B payload + 40 B indices + 4 B scale
+    assert encoded_client_bytes(t, CodecConfig(topk_frac=0.1, bits=0)) \
+        == 84.0

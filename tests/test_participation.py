@@ -54,6 +54,61 @@ def test_coverage_rejects_infeasible():
                                       jnp.asarray(0), 2)
 
 
+def test_max_selection_gap_known_masks():
+    """Hand-built schedules with known gaps, including the implicit t=-1
+    start (first selection measured from the start)."""
+    # client 0 picked at t=0,3 (gap 3); client 1 at t=2 only (gap 3: 2-(-1))
+    masks = jnp.asarray([[1, 0], [0, 0], [0, 1], [1, 0]], dtype=bool)
+    assert int(participation.max_selection_gap(masks)) == 3
+    # every round, everyone: all gaps are 1
+    assert int(participation.max_selection_gap(
+        jnp.ones((5, 3), bool))) == 1
+    # a client selected only once, late: the start-to-first gap dominates
+    masks = jnp.zeros((6, 2), bool).at[:, 0].set(True).at[5, 1].set(True)
+    assert int(participation.max_selection_gap(masks)) == 6
+    # never-selected clients contribute no gap-at-selection entries
+    masks = jnp.ones((4, 2), bool).at[:, 1].set(False)
+    assert int(participation.max_selection_gap(masks)) == 1
+
+
+@pytest.mark.parametrize("m,s0", [(13, 5), (12, 5), (7, 3), (10, 4)])
+def test_coverage_window_bound_noneven_chunks(m, s0):
+    """Eq. (30) over MULTIPLE windows when m % s0 != 0: the cyclic chunking
+    must still cover [m] inside every window, so the max selection gap stays
+    < 2*s0 across window boundaries."""
+    assert m % s0 != 0  # the edge this test pins
+    rho = max(0.5, -(-m // s0) / m + 0.05)  # keep rho*m >= ceil(m/s0)
+    key = jax.random.PRNGKey(11)
+    T = 6 * s0
+    masks = jnp.stack([
+        participation.sample_coverage(key, m, rho, jnp.asarray(t), s0)
+        for t in range(T)])
+    masks_np = np.asarray(masks)
+    for w in range(T // s0):
+        window = masks_np[w * s0:(w + 1) * s0]
+        assert window.any(axis=0).all(), f"window {w} missed a client"
+    gap = int(participation.max_selection_gap(masks))
+    assert gap < 2 * s0, f"eq. (30) violated: gap={gap} >= 2*s0={2 * s0}"
+    # selection budget respected every round
+    n_sel = max(1, int(round(rho * m)))
+    assert (masks_np.sum(axis=1) == n_sel).all()
+
+
+def test_coverage_mandatory_chunk_cyclic_wraparound():
+    """With m % s0 != 0 the last window position wraps cyclically; the
+    mandatory chunk must still be ceil(m/s0) DISTINCT clients."""
+    m, s0 = 13, 5
+    chunk = -(-m // s0)
+    key = jax.random.PRNGKey(3)
+    for pos in range(s0):
+        mask = participation.sample_coverage(key, m, 0.5, jnp.asarray(pos),
+                                             s0)
+        assert int(mask.sum()) == max(1, round(0.5 * m))
+        # the chunk wraps: (pos*chunk + [0..chunk)) % m are all distinct
+        idx = (pos * chunk + np.arange(chunk)) % m
+        assert len(set(idx.tolist())) == chunk
+
+
 def test_remark_vi1_probability():
     """Remark VI.1: p_i = 1 - (1-rho)^{s0} ~ 0.999 for rho=.5, s0=10."""
     m, rho, s0 = 16, 0.5, 10

@@ -1,0 +1,271 @@
+"""Federated systems runtime (repro.sim): exactness vs core/, aggregation
+policies over simulated time, arrival-aware masks, and the byte ledger."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, fedepm, participation
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.sim import (
+    CodecConfig,
+    FedSim,
+    SimConfig,
+    client_work_flops,
+    make_latency_model,
+    make_profiles,
+    round_arrivals,
+    uniform_profiles,
+)
+
+M = 16
+N = 14
+
+
+@pytest.fixture(scope="module")
+def task():
+    X, y = synth.adult_like(d=4000, n=N, seed=0)
+    batches = jax.tree_util.tree_map(jnp.asarray,
+                                     partition_iid(X, y, m=M, seed=0))
+    return batches, make_logistic_loss()
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# exactness: with an infinite deadline and no codec the sim IS core/fedepm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,kw", [
+    ("sync", {}),
+    ("deadline", {"deadline": math.inf}),
+])
+def test_sim_reproduces_fedepm_bitforbit(task, policy, kw):
+    """Acceptance criterion: same masks => same states, bit-for-bit, on the
+    paper logreg task (eps_dp on, so the DP noise stream is exercised too)."""
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.1,
+                                             sensitivity_clip=1.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    sref = s0
+    for _ in range(6):
+        sref, _ = step(sref)
+
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, sim=SimConfig(policy=policy, **kw))
+    sim.run(6)
+
+    assert _tree_equal(sim.state.w_tau, sref.w_tau)
+    assert _tree_equal(sim.state.W, sref.W)
+    assert _tree_equal(sim.state.Z, sref.Z)
+    assert int(sim.state.k) == int(sref.k)
+    assert np.array_equal(np.asarray(sim.state.key), np.asarray(sref.key))
+    # no stragglers were dropped on the way
+    assert all(m.n_dropped == 0 for m in sim.metrics)
+
+
+def test_sim_reproduces_sfedavg_bitforbit(task):
+    batches, loss = task
+    cfg = baselines.BaselineConfig(m=M, k0=4, rho=0.5, eps_dp=0.0)
+    s0 = baselines.init_state(jax.random.PRNGKey(1), jnp.zeros(N), cfg)
+    step = jax.jit(lambda s: baselines.sfedavg_round(s, batches, loss, cfg))
+    sref = s0
+    for _ in range(4):
+        sref, _ = step(sref)
+    sim = FedSim(alg="sfedavg", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, sim=SimConfig(policy="sync"))
+    sim.run(4)
+    assert _tree_equal(sim.state.w_tau, sref.w_tau)
+    assert _tree_equal(sim.state.W, sref.W)
+
+
+def test_default_round_mask_matches_internal(task):
+    """The exported mask hook reproduces the internal selection."""
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(2), jnp.zeros(N), cfg)
+    mask = fedepm.default_round_mask(s0, cfg)
+    s_int, met_int = fedepm.fedepm_round(s0, batches, loss, cfg)
+    s_ext, met_ext = fedepm.fedepm_round(s0, batches, loss, cfg, mask=mask)
+    assert np.array_equal(np.asarray(met_int.selected),
+                          np.asarray(met_ext.selected))
+    assert _tree_equal(s_int.W, s_ext.W)
+
+
+# ---------------------------------------------------------------------------
+# arrival-aware masks (core.participation)
+# ---------------------------------------------------------------------------
+
+def test_arrival_mask_deadline():
+    cand = jnp.asarray([True, True, True, False])
+    arr = jnp.asarray([0.5, 2.0, jnp.inf, 0.1])
+    got = participation.arrival_mask(cand, arr, 1.0)
+    assert got.tolist() == [True, False, False, False]
+    # infinite deadline still drops offline (inf-arrival) clients
+    got_inf = participation.arrival_mask(cand, arr, jnp.inf)
+    assert got_inf.tolist() == [True, True, False, False]
+
+
+def test_first_arrivals_mask():
+    cand = jnp.asarray([True, True, True, True, False])
+    arr = jnp.asarray([3.0, 1.0, 2.0, jnp.inf, 0.1])
+    got = participation.first_arrivals_mask(cand, arr, 2)
+    assert got.tolist() == [False, True, True, False, False]
+    # fewer finite arrivals than n_keep => keep all that arrived
+    got_all = participation.first_arrivals_mask(cand, arr, 4)
+    assert got_all.tolist() == [True, True, True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# policies over simulated time
+# ---------------------------------------------------------------------------
+
+def test_deadline_drops_stragglers_and_carries_state(task):
+    """With a tight deadline under heavy-tail latency some candidates are
+    dropped; their W rows carry through unchanged (eq. (22))."""
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=1.0, k0=4, eps_dp=0.0,
+                                             sampler="full")
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    profiles = make_profiles(M, seed=3)
+    # calibrate against the sim's own work model: a 40th-percentile deadline
+    # makes most draws contain both finishers and stragglers
+    work = client_work_flops("fedepm", k0=cfg.k0, n_params=N,
+                             d_local=4000 / M)
+    rng = np.random.default_rng(0)
+    lat = make_latency_model("pareto", alpha=1.1)
+    arr = np.concatenate([
+        round_arrivals(profiles, rng, lat, work_flops=work,
+                       down_bytes=N * 4, up_bytes=N * 4)
+        for _ in range(200)])
+    deadline = float(np.quantile(arr, 0.4))
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=profiles,
+                 sim=SimConfig(policy="deadline", deadline=deadline,
+                               latency="pareto", latency_alpha=1.1, seed=4))
+    prev_W = np.asarray(jax.tree_util.tree_leaves(s0.W)[0]).copy()
+    m0 = sim.step()
+    assert m0.n_dropped > 0                      # stragglers existed
+    assert m0.n_aggregated > 0                   # but someone made it
+    assert m0.n_aggregated + m0.n_dropped == m0.n_contacted
+    assert m0.t_round <= deadline + 1e-12
+    W1 = np.asarray(jax.tree_util.tree_leaves(sim.state.W)[0])
+    sel = np.asarray(sim.last_round_metrics.selected)
+    assert np.array_equal(W1[~sel], prev_W[~sel])  # dropped rows untouched
+    assert not np.array_equal(W1[sel], prev_W[sel])
+
+
+def test_overselect_keeps_first_arrivals(task):
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=make_profiles(M, seed=5),
+                 sim=SimConfig(policy="overselect", overselect_factor=1.5,
+                               latency="lognormal", seed=6))
+    n_keep = math.ceil(cfg.rho * M)  # the documented first-⌈ρm⌉ rule
+    for _ in range(3):
+        m = sim.step()
+        assert m.n_contacted == min(M, round(cfg.rho * 1.5 * M))
+        assert m.n_aggregated == n_keep
+        assert m.n_dropped == m.n_contacted - n_keep
+
+
+def test_unavailable_clients_never_aggregate(task):
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    profiles = make_profiles(M, seed=1, availability=0.0)  # everyone offline
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=profiles,
+                 sim=SimConfig(policy="sync", seed=2))
+    m = sim.step()
+    assert m.abandoned and m.n_aggregated == 0
+    assert _tree_equal(sim.state.W, s0.W)        # state untouched
+    assert sim.ledger.total_down > 0             # broadcast was still paid
+    assert sim.ledger.total_up == 0
+
+
+def test_infinite_deadline_with_offline_clients(task):
+    """deadline=inf + partial availability: offline clients are dropped
+    (inf <= inf must not admit them), simulated time stays finite, and
+    only completed uploads are billed."""
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    profiles = make_profiles(M, seed=1, availability=0.6)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=profiles,
+                 sim=SimConfig(policy="deadline", deadline=math.inf,
+                               seed=9))
+    dense = N * 4
+    saw_offline_candidate = False
+    for _ in range(8):
+        mm = sim.step()
+        assert np.isfinite(mm.t_round) and np.isfinite(mm.t_total)
+        assert mm.bytes_up == mm.n_aggregated * dense
+        saw_offline_candidate |= mm.n_dropped > 0
+    assert saw_offline_candidate  # the probe actually exercised offline-ness
+
+
+def test_overselect_rejects_nonuniform_sampler(task):
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0,
+                                             sampler="coverage")
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    with pytest.raises(ValueError, match="overselect"):
+        FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+               loss_fn=loss, sim=SimConfig(policy="overselect"))
+
+
+# ---------------------------------------------------------------------------
+# byte ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_bytes_match_tree_shapes(task):
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, sim=SimConfig(policy="sync"))
+    rounds = 5
+    sim.run(rounds)
+    n_sel = max(1, round(cfg.rho * M))
+    dense = N * 4  # fp32 logreg weights
+    assert sim.ledger.total_down == rounds * n_sel * dense
+    assert sim.ledger.total_up == rounds * n_sel * dense
+    # per-client accounting sums to the totals
+    assert sim.ledger.up.sum() == sim.ledger.total_up
+    assert len(sim.ledger.rounds) == rounds
+
+
+def test_codec_reduces_bytes_and_stays_close(task):
+    """Compressed FedEPM: fewer uplink bytes, trajectory still descends and
+    stays near the uncompressed one (dequantize-before-ENS)."""
+    batches, loss = task
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    def final_f(codec):
+        sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                     loss_fn=loss,
+                     sim=SimConfig(policy="sync", codec=codec))
+        sim.run(10)
+        f = float(fedepm.global_objective(loss, sim.state.w_tau, batches))
+        return f / M, sim.ledger.total_up
+
+    f_raw, up_raw = final_f(None)
+    f_q, up_q = final_f(CodecConfig(topk_frac=0.5, bits=8))
+    assert up_q < up_raw
+    assert f_q < math.log(2.0)            # still descended from f(0)=ln 2
+    assert abs(f_q - f_raw) < 5e-3        # and close to uncompressed
