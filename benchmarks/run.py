@@ -23,7 +23,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from benchmarks import (ens_kernel, fig2_accuracy, fig3_k0, fig4_rho,
-                            fig5_privacy, fig6_stragglers, table1_lct)
+                            fig5_privacy, fig6_stragglers, fig7_async,
+                            table1_lct)
 
     d = 4000 if args.quick else 45222
     trials = 1 if args.quick else (3 if not args.full else 10)
@@ -47,6 +48,9 @@ def main(argv=None):
         "fig6": lambda: fig6_stragglers.run(
             d=d, m=16 if args.quick else 32,
             rounds=30 if args.quick else 80),
+        "fig7": lambda: fig7_async.run(
+            d=d, m=16 if args.quick else 32,
+            rounds=20 if args.quick else 60),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -66,8 +66,23 @@ def arrival_mask(candidates: jax.Array, arrivals: jax.Array,
 
     candidates: (m,) bool; arrivals: (m,) float (inf = never arrives; an
     offline client is dropped even under an infinite deadline).
+    ``deadline`` may be a scalar (one cutoff for the cohort) or an (m,)
+    array of PER-CLIENT cutoffs -- the adaptive-deadline policy feeds the
+    EWMA tracker's per-client budgets through here.
     """
     return candidates & jnp.isfinite(arrivals) & (arrivals <= deadline)
+
+
+def staleness_weight(staleness, exp: float):
+    """FedBuff-style down-weighting of stale async contributions.
+
+    gamma = (1 + s)^(-exp) where s is the number of server model versions
+    that elapsed between a client's dispatch and its aggregation. s = 0
+    gives EXACTLY 1.0 (any exp), which the async server relies on to
+    recover the synchronous trajectory bit-for-bit at buffer = cohort
+    size; exp = 0 disables down-weighting. Works on scalars or arrays.
+    """
+    return (1.0 + staleness) ** (-exp)
 
 
 def first_arrivals_mask(candidates: jax.Array, arrivals: jax.Array,

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels with bit-identical jnp references.
+
+One subpackage per op family (ens/, prox/, quant/), each following the
+ref.py + <name>.py + ops.py convention documented in docs/kernels.md.
+Kernels exist ONLY for compute hot-spots; callers import the ops modules
+and select the implementation per call.
+"""

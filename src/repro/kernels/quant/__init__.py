@@ -1,0 +1,9 @@
+"""Upload-codec kernels: uniform stochastic quantization + error feedback.
+
+Layout follows the repo's kernel convention (see docs/kernels.md): ``ref.py``
+holds the pure-jnp oracle, ``quant.py``/``ef.py`` the Pallas TPU kernels,
+``ops.py`` the public impl-dispatching entry points. The Pallas and jnp
+paths consume caller-supplied dither bits and agree BIT-FOR-BIT
+(tests/test_kernels_quant.py).
+"""
+from repro.kernels.quant.ops import ef_accumulate, quantize  # noqa: F401

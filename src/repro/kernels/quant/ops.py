@@ -1,4 +1,13 @@
-"""Public entry points for the upload-codec quantizer with impl dispatch."""
+"""Public entry points for the upload-codec quantizer with impl dispatch.
+
+Two ops, each a (Pallas kernel, bit-identical jnp reference) pair:
+
+``quantize``      -- memoryless row-wise quantize-dequantize (the classic
+                     stochastic-quantization codec path).
+``ef_accumulate`` -- fused error-feedback step H + Q(Z - H): compress the
+                     residual against the shared codec memory and accumulate
+                     the decoded value back into it (EF21-style).
+"""
 from __future__ import annotations
 
 from typing import Literal
@@ -6,6 +15,7 @@ from typing import Literal
 import jax
 
 from repro.kernels.quant import ref as _ref
+from repro.kernels.quant.ef import ef_accumulate_pallas
 from repro.kernels.quant.quant import quantize_pallas
 
 Impl = Literal["pallas", "ref"]
@@ -26,4 +36,31 @@ def quantize(X: jax.Array, scale: jax.Array, bits: int,
                                interpret=interpret)
     if impl == "ref":
         return _ref.quantize_ref(X, scale, bits, u32)
+    raise ValueError(f"unknown quant impl {impl!r}")
+
+
+# the ref MUST run jitted: the trailing accumulate h + q*delta is fused to
+# an FMA by XLA (one rounding) but evaluated as mul-then-add eagerly (two
+# roundings) -- same class of hazard as the div-vs-reciprocal note in
+# ref.py, and it breaks the bit-for-bit kernel/ref contract by 1 ulp
+_ef_ref_jit = jax.jit(_ref.ef_accumulate_ref, static_argnames=("bits",))
+
+
+def ef_accumulate(Z: jax.Array, H: jax.Array, scale: jax.Array, bits: int,
+                  u32: jax.Array | None = None, *, impl: Impl = "ref",
+                  block_n: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused error-feedback accumulate/compress: H + Q_bits(Z - H), row-wise.
+
+    Z, H: (m, n) upload and shared codec memory; scale: (m,) per-row
+    magnitude bound of the residual Z - H; bits: wire bits per coordinate
+    (>= 2); u32: optional (m, n) uint32 dither (present => unbiased
+    stochastic rounding). Returns the updated memory / server reconstruction
+    in Z.dtype.
+    """
+    if impl == "pallas":
+        return ef_accumulate_pallas(Z, H, scale, bits, u32, block_n=block_n,
+                                    interpret=interpret)
+    if impl == "ref":
+        return _ef_ref_jit(Z, H, scale, bits, u32)
     raise ValueError(f"unknown quant impl {impl!r}")

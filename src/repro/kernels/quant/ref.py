@@ -60,3 +60,34 @@ def quantize_ref(X: jax.Array, scale: jax.Array, bits: int,
     q = jnp.clip(q, -L, L)
     out = jnp.where(delta > 0, q * safe, 0.0)
     return out.astype(X.dtype)
+
+
+def ef_accumulate_ref(Z: jax.Array, H: jax.Array, scale: jax.Array, bits: int,
+                      u32: jax.Array | None = None) -> jax.Array:
+    """Error-feedback accumulate/compress step: H + Q_bits(Z - H), row-wise.
+
+    Z, H: (m, n); scale: (m,) magnitude bound of the RESIDUAL Z - H; u32:
+    (m, n) dither or None (round-half-up). Returns the server/client shared
+    reconstruction h_i' = h_i + Q(z_i - h_i) -- what the wire carries is the
+    quantized residual, so the codec memory contracts toward z_i instead of
+    discarding the quantization error each round (EF21-style).
+
+    Every arithmetic step mirrors ``ef_accumulate_pallas`` (float32 residual,
+    mul-by-reciprocal grid, f32 accumulate, single final cast) so the two
+    agree bit-for-bit; rows with scale <= 0 pass H through exactly.
+    """
+    L = quant_levels(bits)
+    z = Z.astype(jnp.float32)
+    h = H.astype(jnp.float32)
+    r = z - h
+    s = scale.astype(jnp.float32).reshape(-1, 1)
+    delta = s * (1.0 / L)
+    safe = jnp.where(delta > 0, delta, 1.0)
+    if u32 is None:
+        u = 0.5
+    else:
+        u = u32.astype(jnp.float32) * _INV_2_32
+    q = jnp.floor(r / safe + u)
+    q = jnp.clip(q, -L, L)
+    dec = jnp.where(delta > 0, q * safe, 0.0)
+    return (h + dec).astype(Z.dtype)

@@ -8,16 +8,22 @@ WHO participates (from simulated arrival times) and WHAT the server holds
 (dequantized uploads when the codec is on).
 
 Usage:
-  python -m repro.launch.simulate --alg fedepm --policy deadline \
+  python -m repro.launch.simulate --alg fedepm --aggregation deadline \
       --deadline 0.002 --latency pareto --m 50 --rounds 30 --d 4000
-  python -m repro.launch.simulate --alg fedepm --policy sync \
-      --topk 0.25 --bits 8            # compressed uploads
-  python -m repro.launch.simulate --alg sfedavg --policy overselect \
+  python -m repro.launch.simulate --alg fedepm --aggregation sync \
+      --topk 0.25 --bits 8 --error-feedback   # compressed, EF memory
+  python -m repro.launch.simulate --alg fedepm --aggregation async \
+      --buffer-size 8 --latency pareto        # FedBuff-style buffered
+  python -m repro.launch.simulate --alg sfedavg --aggregation overselect \
       --overselect 1.5 --latency lognormal
 
-Policies: sync (wait for all), deadline (drop stragglers past --deadline,
-eq. (22) carry-through), overselect (contact a uniform candidate set at
-rate rho*--overselect, keep the first ceil(rho*m) arrivals).
+Aggregation modes: sync (wait for all), deadline (drop stragglers past
+--deadline, eq. (22) carry-through), adaptive (per-client EWMA-learned
+deadlines), overselect (contact a uniform candidate set at rate
+rho*--overselect, keep the first ceil(rho*m) arrivals), async (buffered:
+aggregate every --buffer-size arrivals with staleness-weighted merges;
+one reported "round" = one aggregation event). ``--policy`` is accepted
+as an alias of ``--aggregation``. Full semantics: docs/sim.md.
 """
 from __future__ import annotations
 
@@ -58,13 +64,16 @@ def build_sim(args) -> tuple[FedSim, dict]:
     codec = None
     if args.topk < 1.0 or args.bits > 0:
         codec = CodecConfig(topk_frac=args.topk,
-                            bits=args.bits, impl=args.quant_impl)
+                            bits=args.bits, impl=args.quant_impl,
+                            error_feedback=args.error_feedback)
     sim_cfg = SimConfig(
-        policy=args.policy,
+        policy=args.aggregation,
         deadline=args.deadline if args.deadline > 0 else math.inf,
         overselect_factor=args.overselect,
         latency=args.latency, latency_sigma=args.latency_sigma,
-        latency_alpha=args.latency_alpha, seed=args.seed, codec=codec)
+        latency_alpha=args.latency_alpha, seed=args.seed, codec=codec,
+        buffer_size=args.buffer_size, staleness_exp=args.staleness_exp,
+        deadline_slack=args.deadline_slack, ewma_beta=args.ewma_beta)
     profiles = make_profiles(args.m, seed=args.seed,
                              availability=args.availability)
     sim = FedSim(alg=args.alg, cfg=cfg, state=state, batches=batches,
@@ -108,7 +117,7 @@ def run(args) -> dict:
                                   jnp.asarray(aux["y"])))
     dropped = sum(m.n_dropped for m in sim.metrics)
     summary = {
-        "alg": args.alg, "policy": args.policy, "latency": args.latency,
+        "alg": args.alg, "policy": args.aggregation, "latency": args.latency,
         "rounds": rounds_run, "f_final": f_hist[-1] / args.m,
         "accuracy": acc, "sim_time_s": sim.t,
         "stragglers_dropped": dropped,
@@ -117,6 +126,11 @@ def run(args) -> dict:
         "bytes_total": sim.ledger.total,
         "up_bytes_per_client_round": sim.up_bytes_per_client,
     }
+    if args.aggregation == "async":
+        summary["staleness_max"] = max(m.staleness_max for m in sim.metrics)
+        summary["staleness_mean"] = float(np.mean(
+            [m.staleness_mean for m in sim.metrics if not m.abandoned]
+            or [0.0]))
     if not args.quiet:
         print("\nsummary:")
         for k, v in summary.items():
@@ -130,11 +144,23 @@ def main(argv=None):
                     "byte ledger) on the paper logreg task")
     ap.add_argument("--alg", default="fedepm",
                     choices=["fedepm", "sfedavg", "sfedprox"])
-    ap.add_argument("--policy", default="sync",
-                    choices=["sync", "deadline", "overselect"])
+    ap.add_argument("--aggregation", "--policy", dest="aggregation",
+                    default="sync",
+                    choices=["sync", "deadline", "adaptive", "overselect",
+                             "async"],
+                    help="aggregation mode (--policy is an alias)")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="deadline policy cutoff in simulated seconds "
                          "(<= 0 means infinite)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: contributions per aggregation event "
+                         "(0 = cohort size, which recovers sync exactly)")
+    ap.add_argument("--staleness-exp", type=float, default=0.5,
+                    help="async: stale merges weighted (1+s)^-exp")
+    ap.add_argument("--deadline-slack", type=float, default=2.0,
+                    help="adaptive: per-client wait budget = slack * EWMA")
+    ap.add_argument("--ewma-beta", type=float, default=0.3,
+                    help="adaptive: EWMA weight of the newest latency")
     ap.add_argument("--overselect", type=float, default=1.5,
                     help="over-selection factor: contact a uniform "
                          "candidate set at rate rho*f, keep the first "
@@ -157,6 +183,9 @@ def main(argv=None):
                     help="codec: fraction of coordinates uploaded")
     ap.add_argument("--bits", type=int, default=0,
                     help="codec: quantization bits (0 = raw values)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="codec: EF21-style memory (compress residuals "
+                         "against the shared reconstruction)")
     ap.add_argument("--quant-impl", default="ref",
                     choices=["ref", "pallas"])
     ap.add_argument("--seed", type=int, default=0)
@@ -168,6 +197,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    if args.error_feedback and args.topk >= 1.0 and args.bits == 0:
+        ap.error("--error-feedback needs a lossy codec: set --topk < 1 "
+                 "and/or --bits > 0")
 
     summary = run(args)
     if args.json:

@@ -1,6 +1,9 @@
-"""Federated systems runtime: straggler simulation, deadline aggregation,
-and a byte-accurate communication ledger around the core round functions."""
+"""Federated systems runtime: straggler simulation, sync/deadline/adaptive/
+overselect/async-buffered aggregation, upload codec with optional error
+feedback, and a byte-accurate communication ledger around the core round
+functions. Architecture notes live in docs/sim.md."""
 from repro.sim.clients import (          # noqa: F401
+    AdaptiveDeadlines,
     ClientProfiles,
     make_latency_model,
     make_profiles,
@@ -17,6 +20,7 @@ from repro.sim.transport import (        # noqa: F401
     ByteLedger,
     CodecConfig,
     codec_roundtrip,
+    ef_roundtrip,
     encoded_client_bytes,
     stacked_client_bytes,
     tree_client_bytes,

@@ -101,6 +101,57 @@ def make_latency_model(kind: str = "deterministic", *, sigma: float = 0.5,
     raise ValueError(f"unknown latency model {kind!r}")
 
 
+class AdaptiveDeadlines:
+    """Per-client EWMA of observed report latencies -> per-client cutoffs.
+
+    A production FL server does not know a fixed straggler deadline up
+    front; it learns one from the report times it observes. This tracker
+    keeps, per client, an exponentially weighted moving average of the
+    latencies the server has seen and budgets each round's wait for client
+    i at ``slack * ewma_i``. Clients never observed yet get an infinite
+    budget (the server has no basis to cut them off), so the first round
+    behaves exactly like sync and the policy tightens as evidence arrives.
+
+    Observations are CENSORED at the cutoff: for a client dropped at its
+    budget the server only knows the report took longer than the budget it
+    waited, so the budget itself (not the unobserved true arrival) feeds
+    the EWMA -- this keeps the estimate finite under heavy-tail latencies
+    while still adapting upward after a timeout.
+    """
+
+    def __init__(self, m: int, *, beta: float = 0.3, slack: float = 2.0):
+        if not (0.0 < beta <= 1.0):
+            raise ValueError(f"beta must be in (0, 1]; got {beta}")
+        if slack < 1.0:
+            raise ValueError(f"slack must be >= 1 (a budget below the "
+                             f"estimate drops everyone); got {slack}")
+        self.beta = beta
+        self.slack = slack
+        self.ewma = np.full(m, np.nan)  # nan = never observed
+
+    def cutoffs(self) -> np.ndarray:
+        """(m,) per-client wait budget for the coming round (inf = no
+        estimate yet)."""
+        return np.where(np.isnan(self.ewma), np.inf, self.slack * self.ewma)
+
+    def observe(self, candidates: np.ndarray, arrivals: np.ndarray) -> None:
+        """Fold one round's outcomes into the EWMAs.
+
+        candidates: (m,) bool clients the server contacted; arrivals: (m,)
+        simulated report times (inf = never arrived). Clients that beat
+        their cutoff contribute their true latency; clients cut off
+        contribute the (finite) budget the server actually waited; offline
+        clients under an infinite budget contribute nothing.
+        """
+        cut = self.cutoffs()
+        obs = np.minimum(np.asarray(arrivals, np.float64), cut)
+        ok = np.asarray(candidates, bool) & np.isfinite(obs)
+        first = np.isnan(self.ewma)
+        new = np.where(first, obs,
+                       (1.0 - self.beta) * self.ewma + self.beta * obs)
+        self.ewma = np.where(ok, new, self.ewma)
+
+
 def round_arrivals(profiles: ClientProfiles, rng: np.random.Generator,
                    latency: LatencyModel, *, work_flops: float,
                    down_bytes: float, up_bytes: np.ndarray | float

@@ -13,10 +13,40 @@ arrivals into (participation mask, simulated round duration):
                  non-selected clients do (the mask hook reuses the same
                  tree_where_client carry path). Round time is the deadline
                  when anyone misses it, else the slowest arrival.
+  adaptive    -- per-client deadlines learned online: an EWMA of observed
+                 report latencies (clients.AdaptiveDeadlines) budgets each
+                 round's wait for client i at slack*ewma_i; never-observed
+                 clients get an infinite budget, so round 1 degrades to
+                 sync and the cutoffs tighten as evidence arrives. Dropped
+                 clients carry through via eq. (22) as under ``deadline``.
   overselect  -- contact a uniform candidate set drawn at rate rho*factor
                  (the sampler's |S| = round(rho*factor*m) convention),
                  aggregate the first ceil(rho*m) arrivals; round time is
                  the last kept arrival.
+  async       -- FedBuff-style buffered asynchrony; see below.
+
+Asynchronous buffered aggregation (policy="async")
+--------------------------------------------------
+The server no longer runs in rounds. It dispatches whole cohorts (drawn
+from the SAME key stream as sync selection), lets uploads arrive as events
+over simulated time, and applies an aggregation once ``buffer_size``
+contributions are in. Clients therefore train on STALE broadcasts: a
+contribution dispatched at server version v and merged at version v' has
+staleness s = v' - v and is folded into the server's Z with weight
+gamma = (1 + s)^(-staleness_exp) (participation.staleness_weight, the
+FedBuff convention), i.e. Z_i <- gamma * z_i + (1 - gamma) * Z_i. After
+each aggregation the server tops the in-flight pool back up to one cohort,
+so stragglers from old cohorts overlap fresh work instead of gating it.
+One ``step()`` is one aggregation event.
+
+With buffer_size = cohort size, full availability and no codec, every
+contribution merges at staleness 0 (gamma = 1 exactly), and the event
+sequence degenerates to dispatch -> drain -> merge -> dispatch: the
+trajectory is BIT-FOR-BIT the synchronous one (tests/test_sim_async.py).
+A dispatch whose cohort is entirely offline leaves the algorithm state
+(including the key) untouched, exactly like an abandoned sync round; after
+_MAX_DRY_DISPATCHES consecutive such dispatches the step gives up and
+reports abandoned=True.
 
 The mask is fed into the round via ``fedepm_round(..., mask=...)`` -- the
 selection key stream is unchanged, so with policy="sync", full availability,
@@ -33,6 +63,8 @@ has no cutoff to wait for and costs zero simulated time.)
 from __future__ import annotations
 
 import dataclasses
+import functools
+import heapq
 import math
 from typing import Any, Callable, NamedTuple
 
@@ -41,20 +73,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, fedepm, participation
-from repro.core.treeutil import tree_size, tree_where_client
+from repro.core.treeutil import tmap, tree_size, tree_where_client
 from repro.sim import clients as simclients
 from repro.sim.transport import (
     ByteLedger,
     CodecConfig,
     codec_roundtrip,
+    ef_roundtrip,
     encoded_client_bytes,
     tree_client_bytes,
 )
 
+_POLICIES = ("sync", "deadline", "adaptive", "overselect", "async")
+
+# async: consecutive all-offline cohort broadcasts before a step gives up
+_MAX_DRY_DISPATCHES = 3
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    policy: str = "sync"            # "sync" | "deadline" | "overselect"
+    policy: str = "sync"            # one of _POLICIES
     deadline: float = math.inf      # seconds, deadline policy cutoff
     overselect_factor: float = 1.5  # candidate draw rate = rho * factor
     latency: str = "deterministic"  # clients.make_latency_model kind
@@ -62,6 +100,12 @@ class SimConfig:
     latency_alpha: float = 1.2
     seed: int = 0
     codec: CodecConfig | None = None
+    # async (buffered) aggregation
+    buffer_size: int = 0            # contributions per aggregation; 0 = cohort
+    staleness_exp: float = 0.5      # gamma = (1 + staleness)^-exp
+    # adaptive per-client deadlines
+    deadline_slack: float = 2.0     # wait budget = slack * ewma_i
+    ewma_beta: float = 0.3          # EWMA weight of the newest observation
 
 
 class SimMetrics(NamedTuple):
@@ -74,6 +118,60 @@ class SimMetrics(NamedTuple):
     bytes_down: float
     bytes_up: float
     abandoned: bool      # nobody reported before the cutoff
+    staleness_mean: float = 0.0  # async: mean versions-behind of the merge
+    staleness_max: int = 0       # async: worst versions-behind of the merge
+
+
+@dataclasses.dataclass
+class _Contribution:
+    """One in-flight client upload (async policy)."""
+
+    client: int
+    version: int   # server version at dispatch (staleness anchor)
+    serial: int    # global upload serial (codec dither provenance)
+    z_row: Any     # (1, ...) slice of the dispatch's upload tree
+    w_row: Any     # (1, ...) slice of the dispatch's iterate tree
+
+
+@functools.partial(jax.jit, static_argnames=("codec", "ef"))
+def _merge_contribution(Z, W, H, z_row, w_row, idx, gamma, key, *,
+                        codec: CodecConfig | None, ef: bool):
+    """Fold one arrived upload into the server's stacked state.
+
+    The upload is decoded first (codec memoryless fallback = the server's
+    CURRENT stale row; with error feedback the shared memory row in H),
+    then staleness-merged: Z_i <- gamma * z_hat + (1 - gamma) * Z_i. The
+    gamma >= 1 branch replaces the row EXACTLY (no arithmetic), which is
+    what makes the zero-staleness trajectory bit-identical to sync. W_i is
+    replaced outright -- it is the client's own iterate, which the client
+    reports authoritatively; only the aggregate-facing Z is down-weighted.
+    """
+    def row(tree):
+        return tmap(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=0), tree)
+
+    def set_row(tree, r):
+        return tmap(
+            lambda x, rr: jax.lax.dynamic_update_slice_in_dim(
+                x, rr.astype(x.dtype), idx, axis=0), tree, r)
+
+    if codec is None:
+        z_hat = z_row
+        H_new = H
+    elif ef:
+        z_hat = ef_roundtrip(z_row, row(H), key, codec)
+        H_new = set_row(H, z_hat)
+    else:
+        z_hat = codec_roundtrip(z_row, row(Z), key, codec)
+        H_new = H
+
+    def zmerge(zl, r):
+        cur = jax.lax.dynamic_slice_in_dim(zl, idx, 1, axis=0)
+        new = jnp.where(gamma >= 1.0, r, gamma * r + (1.0 - gamma) * cur)
+        return jax.lax.dynamic_update_slice_in_dim(
+            zl, new.astype(zl.dtype), idx, axis=0)
+
+    return tmap(zmerge, Z, z_hat), set_row(W, w_row), H_new
 
 
 def client_work_flops(alg: str, *, k0: int, n_params: int, d_local: float,
@@ -132,6 +230,12 @@ class FedSim:
                  work_flops: float | None = None):
         if alg not in _ALGS:
             raise ValueError(f"unknown alg {alg!r}")
+        if sim.policy not in _POLICIES:
+            raise ValueError(
+                f"unknown policy {sim.policy!r}; expected one of {_POLICIES}")
+        if sim.buffer_size < 0:
+            raise ValueError(f"buffer_size must be >= 0 (0 = cohort size); "
+                             f"got {sim.buffer_size}")
         round_fn, mask_fn = _ALGS[alg]
         self.alg = alg
         self.cfg = cfg
@@ -174,15 +278,45 @@ class FedSim:
         self._up_bytes = float(encoded_client_bytes(state.Z, sim.codec))
         self.ledger = ByteLedger(cfg.m)
 
+        # error-feedback codec memory: the reconstruction h_i both sides
+        # hold after client i's last DELIVERED upload (init: zeros, i.e.
+        # the first upload is encoded in full against an empty memory)
+        self._ef = sim.codec is not None and sim.codec.error_feedback
+        self._H = tmap(jnp.zeros_like, state.Z) if self._ef else None
+
         if sim.codec is not None:
             codec = sim.codec
+            if codec.error_feedback:
 
-            @jax.jit
-            def codec_merge(z_new, z_prev, mask, key):
-                z_dec = codec_roundtrip(z_new, z_prev, key, codec)
-                return tree_where_client(mask, z_dec, z_prev)
+                @jax.jit
+                def codec_merge_ef(z_new, H, z_prev, mask, key):
+                    dec = ef_roundtrip(z_new, H, key, codec)
+                    return (tree_where_client(mask, dec, z_prev),
+                            tree_where_client(mask, dec, H))
 
-            self._codec_merge = codec_merge
+                self._codec_merge_ef = codec_merge_ef
+            else:
+
+                @jax.jit
+                def codec_merge(z_new, z_prev, mask, key):
+                    z_dec = codec_roundtrip(z_new, z_prev, key, codec)
+                    return tree_where_client(mask, z_dec, z_prev)
+
+                self._codec_merge = codec_merge
+
+        if sim.policy == "adaptive":
+            self.deadlines = simclients.AdaptiveDeadlines(
+                cfg.m, beta=sim.ewma_beta, slack=sim.deadline_slack)
+
+        if sim.policy == "async":
+            # cohort size of the (uniform/full) selection stream; also the
+            # in-flight top-up target and the default buffer size
+            self._cohort = max(
+                1, int(np.asarray(self._default_mask(state)).sum()))
+            self._buffer_k = sim.buffer_size or self._cohort
+            self._version = 0          # server model version (aggregations)
+            self._serial = 0           # global upload serial
+            self._inflight: list = []  # heap of (t_arrival, serial, contrib)
 
         self._work = work_flops if work_flops is not None else \
             client_work_flops(alg, k0=cfg.k0,
@@ -236,6 +370,17 @@ class FedSim:
                 return mask, float(dl)
             # infinite deadline but offline candidates: wait out the finite
             return mask, float(finite.max()) if finite.size else 0.0
+        if pol == "adaptive":
+            cut = self.deadlines.cutoffs()
+            mask = np.asarray(participation.arrival_mask(
+                cand_j, arr_j, jnp.asarray(cut)))
+            # the server listens to candidate i until min(arrival_i, cut_i):
+            # round time is the last moment it is still waiting for anyone
+            wait = np.where(candidates, np.minimum(arrivals, cut), np.inf)
+            finite = wait[np.isfinite(wait)]
+            dur = float(finite.max()) if finite.size else 0.0
+            self.deadlines.observe(candidates, arrivals)
+            return mask, dur
         if pol == "overselect":
             mask = np.asarray(participation.first_arrivals_mask(
                 cand_j, arr_j, self._n_keep))
@@ -246,6 +391,8 @@ class FedSim:
     # -- one simulated round ------------------------------------------------
 
     def step(self) -> SimMetrics:
+        if self.sim.policy == "async":
+            return self._step_async()
         candidates = np.asarray(self._candidates(self.state))
         arrivals = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
@@ -264,8 +411,14 @@ class FedSim:
                 self.state, jnp.asarray(mask))
             if self.sim.codec is not None:
                 key = jax.random.fold_in(self._codec_key, self.round_idx)
-                new_state = new_state._replace(Z=self._codec_merge(
-                    new_state.Z, prev_state.Z, jnp.asarray(mask), key))
+                if self._ef:
+                    Z_dec, self._H = self._codec_merge_ef(
+                        new_state.Z, self._H, prev_state.Z,
+                        jnp.asarray(mask), key)
+                    new_state = new_state._replace(Z=Z_dec)
+                else:
+                    new_state = new_state._replace(Z=self._codec_merge(
+                        new_state.Z, prev_state.Z, jnp.asarray(mask), key))
             self.state = new_state
             self.last_round_metrics = rmetrics
             # uploads that completed within the round window (kept clients
@@ -273,6 +426,10 @@ class FedSim:
             # never finish their upload, offline clients never start one
             rec_up = np.asarray(candidates & np.isfinite(arrivals)
                                 & (arrivals <= dur + 1e-12))
+            if self.sim.policy == "adaptive":
+                # per-client cutoffs: the server hangs up on client i at
+                # cut_i, so only kept uploads were actually received
+                rec_up = mask
 
         brec = self.ledger.record_round(
             down_mask=candidates, up_mask=rec_up,
@@ -285,6 +442,105 @@ class FedSim:
             n_dropped=int(candidates.sum()) - int(mask.sum()),
             bytes_down=brec["down"], bytes_up=brec["up"],
             abandoned=bool(abandoned))
+        self.metrics.append(m)
+        self.round_idx += 1
+        return m
+
+    # -- asynchronous buffered aggregation (policy="async") -----------------
+
+    def _dispatch_async(self) -> int:
+        """Broadcast to a fresh cohort at the current simulated time and
+        queue its uploads as future arrival events. Returns #queued.
+
+        The round function runs NOW (clients compute against the broadcast
+        they just received), which advances w_tau/k/key; the resulting W/Z
+        rows only reach the server's state when their arrival event is
+        merged. Causality note: the broadcast w_tau aggregates state.Z,
+        i.e. ONLY uploads already merged -- the cohort's own uploads live
+        in the discarded new_state.Z until their arrivals merge, so no
+        dispatch ever sees an in-flight upload. An all-offline cohort
+        leaves the state (and key) untouched, mirroring the sync policies'
+        abandoned rounds.
+        """
+        candidates = np.asarray(self._candidates(self.state))
+        arrivals = simclients.round_arrivals(
+            self.profiles, self._rng, self._latency,
+            work_flops=self._work, down_bytes=self._down_bytes,
+            up_bytes=self._up_bytes)
+        live = candidates & np.isfinite(arrivals)
+        self._ev_contacted += int(candidates.sum())
+        self._ev_down += candidates.astype(np.int64)
+        self._ev_dropped += int(candidates.sum() - live.sum())
+        if not live.any():
+            return 0
+        new_state, rmetrics = self._step(self.state, jnp.asarray(live))
+        self.state = self.state._replace(
+            w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
+        self.last_round_metrics = rmetrics
+        for i in np.flatnonzero(live):
+            i = int(i)
+            c = _Contribution(
+                client=i, version=self._version, serial=self._serial,
+                z_row=tmap(lambda x: x[i:i + 1], new_state.Z),
+                w_row=tmap(lambda x: x[i:i + 1], new_state.W))
+            heapq.heappush(self._inflight,
+                           (self.t + float(arrivals[i]), c.serial, c))
+            self._serial += 1
+        return int(live.sum())
+
+    def _step_async(self) -> SimMetrics:
+        """One aggregation event: pump arrivals until the buffer holds
+        ``buffer_size`` contributions, staleness-merge them in arrival
+        order, advance the server version, and top the in-flight pool back
+        up to one cohort."""
+        t_start = self.t
+        self._ev_down = np.zeros(self.cfg.m, np.int64)
+        self._ev_up = np.zeros(self.cfg.m, np.int64)
+        self._ev_contacted = 0
+        self._ev_dropped = 0
+        # top the in-flight pool up to one cohort of fresh work BEFORE
+        # pumping arrivals: leftover stragglers from earlier cohorts overlap
+        # the new dispatch. Topping up at step entry (not after the merge)
+        # keeps state-after-N-steps == N dispatches + N merges, which is
+        # what makes the buffer==cohort case bit-identical to sync.run(N).
+        if len(self._inflight) < self._cohort:
+            self._dispatch_async()
+        buffer: list[_Contribution] = []
+        dry = 0
+        while len(buffer) < self._buffer_k and dry < _MAX_DRY_DISPATCHES:
+            if not self._inflight:
+                dry = dry + 1 if self._dispatch_async() == 0 else 0
+                continue
+            t_ev, _, c = heapq.heappop(self._inflight)
+            self.t = max(self.t, t_ev)
+            self._ev_up[c.client] += 1
+            buffer.append(c)
+
+        staleness = [self._version - c.version for c in buffer]
+        for c, s in zip(buffer, staleness):
+            gamma = participation.staleness_weight(s, self.sim.staleness_exp)
+            key = jax.random.fold_in(self._codec_key, c.serial)
+            Z, W, H = _merge_contribution(
+                self.state.Z, self.state.W, self._H, c.z_row, c.w_row,
+                jnp.asarray(c.client, jnp.int32),
+                jnp.asarray(gamma, jnp.float32), key,
+                codec=self.sim.codec, ef=self._ef)
+            self.state = self.state._replace(Z=Z, W=W)
+            self._H = H
+        if buffer:
+            self._version += 1
+
+        brec = self.ledger.record_counts(
+            down_counts=self._ev_down, up_counts=self._ev_up,
+            down_bytes=self._down_bytes, up_bytes=self._up_bytes)
+        m = SimMetrics(
+            round_idx=self.round_idx, t_round=self.t - t_start,
+            t_total=self.t, n_contacted=self._ev_contacted,
+            n_aggregated=len(buffer), n_dropped=self._ev_dropped,
+            bytes_down=brec["down"], bytes_up=brec["up"],
+            abandoned=not buffer,
+            staleness_mean=float(np.mean(staleness)) if staleness else 0.0,
+            staleness_max=int(max(staleness)) if staleness else 0)
         self.metrics.append(m)
         self.round_idx += 1
         return m

@@ -27,6 +27,16 @@ Wire format accounted per client per leaf (n coords, k kept):
     dense  (k == n):  n * bits/8 payload + 4 B scale
     sparse (k <  n):  k * bits/8 payload + k * index_bytes + 4 B scale
 with bits=0 meaning raw leaf-dtype values (no scale overhead when dense).
+
+Error feedback (``CodecConfig.error_feedback`` + ``ef_roundtrip``)
+------------------------------------------------------------------
+The memoryless round-trip above silently BIASES the eq. (22) update: the
+dropped/rounded-away part of every upload is lost each round. With error
+feedback, client and server share a codec memory h_i; the wire carries
+C(z_i - h_i) and both sides accumulate h_i <- h_i + C(z_i - h_i)
+(kernels/quant fused ``ef_accumulate`` pair), so compressed trajectories
+converge to the uncompressed objective (tests/test_sim_async.py pins the
+contraction). Same wire format, same byte accounting.
 """
 from __future__ import annotations
 
@@ -67,6 +77,9 @@ class CodecConfig:
     stochastic: unbiased dithered rounding (True) vs round-half-up.
     impl: quantizer implementation, "ref" (jnp) or "pallas".
     index_bytes: per-kept-coordinate index cost when sparse (k < n).
+    error_feedback: EF21-style codec memory -- compress the RESIDUAL
+        against a shared reconstruction h_i instead of z_i itself (see
+        ``ef_roundtrip``). Wire format and byte accounting are unchanged.
     """
 
     topk_frac: float = 1.0
@@ -74,6 +87,7 @@ class CodecConfig:
     stochastic: bool = True
     impl: str = "ref"
     index_bytes: int = 4
+    error_feedback: bool = False
 
     def __post_init__(self):
         if not (0.0 < self.topk_frac <= 1.0):
@@ -115,16 +129,29 @@ class ByteLedger:
         """down_mask: clients the server contacted (they receive the
         broadcast); up_mask: clients whose upload completed; up_bytes:
         scalar or (m,) per-client encoded size."""
-        down_mask = np.asarray(down_mask, bool)
-        up_mask = np.asarray(up_mask, bool)
+        return self.record_counts(
+            down_counts=np.asarray(down_mask, bool).astype(np.int64),
+            up_counts=np.asarray(up_mask, bool).astype(np.int64),
+            down_bytes=down_bytes, up_bytes=up_bytes)
+
+    def record_counts(self, *, down_counts: np.ndarray,
+                      up_counts: np.ndarray, down_bytes: float,
+                      up_bytes) -> dict:
+        """Count-based variant for the async server: one aggregation event
+        may contact or receive from the same client several times (a client
+        can sit in two overlapping cohorts), so transfers are integer COUNTS
+        per client rather than boolean masks. n_down/n_up report distinct
+        clients; the byte totals weight by the counts."""
+        down_counts = np.asarray(down_counts, np.int64)
+        up_counts = np.asarray(up_counts, np.int64)
         up_pc = np.broadcast_to(np.asarray(up_bytes, np.float64), (self.m,))
-        d = np.where(down_mask, float(down_bytes), 0.0)
-        u = np.where(up_mask, up_pc, 0.0)
+        d = down_counts * float(down_bytes)
+        u = up_counts * up_pc
         self.down += d
         self.up += u
         rec = {"round": len(self.rounds), "down": float(d.sum()),
-               "up": float(u.sum()), "n_down": int(down_mask.sum()),
-               "n_up": int(up_mask.sum())}
+               "up": float(u.sum()), "n_down": int((down_counts > 0).sum()),
+               "n_up": int((up_counts > 0).sum())}
         self.rounds.append(rec)
         return rec
 
@@ -189,4 +216,69 @@ def codec_roundtrip(tree_z, tree_fallback, key: jax.Array,
     keys = jax.random.split(key, len(leaves))
     out = [_roundtrip_leaf(z, fb, kk, codec)
            for z, fb, kk in zip(leaves, fb_leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback round-trip (EF21-style codec memory)
+# ---------------------------------------------------------------------------
+
+def _ef_leaf(z, h, key, codec: CodecConfig):
+    """One stacked leaf (m, ...) -> updated shared reconstruction (m, ...).
+
+    The client transmits C(z - h) (top-k of the RESIDUAL, quantized against
+    the residual's own scale); both sides then hold h' = h + C(z - h). The
+    decoded upload IS h', so as z stabilises the residual -- and with it the
+    compression error -- contracts to zero instead of being re-paid every
+    round. Dense raw (k == n, bits == 0) transmits the residual exactly:
+    return z itself so the identity is bit-exact (h + (z - h) re-associates
+    in floating point).
+    """
+    m = z.shape[0]
+    shape = z.shape
+    zf = z.reshape(m, -1)
+    hf = h.reshape(m, -1)
+    n = zf.shape[1]
+    k = _leaf_k(n, codec.topk_frac)
+    r = zf - hf
+
+    if k == n:
+        if not codec.bits:
+            return z
+        scale = jnp.max(jnp.abs(r.astype(jnp.float32)), axis=1)
+        u32 = (jax.random.bits(key, r.shape, dtype=jnp.uint32)
+               if codec.stochastic else None)
+        h_new = quant_ops.ef_accumulate(zf, hf, scale, codec.bits, u32,
+                                        impl=codec.impl)
+        return h_new.reshape(shape)
+
+    mag = jnp.abs(r.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)                # (m, k)
+    vals = jnp.take_along_axis(r, idx, axis=1)    # (m, k) residual values
+    if codec.bits:
+        scale = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=1)
+        u32 = (jax.random.bits(key, vals.shape, dtype=jnp.uint32)
+               if codec.stochastic else None)
+        vals = quant_ops.quantize(vals, scale, codec.bits, u32,
+                                  impl=codec.impl)
+    h_new = jax.vmap(lambda f, i, v: f.at[i].add(v))(hf, idx, vals)
+    return h_new.reshape(shape)
+
+
+def ef_roundtrip(tree_z, tree_h, key: jax.Array, codec: CodecConfig | None):
+    """Error-feedback encode + decode; stacked (m, ...) pytrees.
+
+    ``tree_h`` is the shared codec memory (the server's reconstruction after
+    the client's last delivered upload; init all-zeros). Returns the NEW
+    memory, which is also exactly what the server now holds for each client
+    -- callers use it both as the decoded upload and as the next h. Identity
+    when codec is None.
+    """
+    if codec is None:
+        return tree_z
+    leaves, treedef = jax.tree_util.tree_flatten(tree_z)
+    h_leaves = jax.tree_util.tree_leaves(tree_h)
+    keys = jax.random.split(key, len(leaves))
+    out = [_ef_leaf(z, h, kk, codec)
+           for z, h, kk in zip(leaves, h_leaves, keys)]
     return jax.tree_util.tree_unflatten(treedef, out)

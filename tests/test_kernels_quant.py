@@ -1,5 +1,6 @@
-"""Upload-codec quantizer: Pallas (interpret) vs jnp ref, grid/unbiasedness
-properties, and the transport codec round-trip built on top of it."""
+"""Upload-codec quantizer + error-feedback accumulate: Pallas (interpret)
+vs jnp ref, grid/unbiasedness properties, and the transport codec
+round-trip built on top of them."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -88,6 +89,81 @@ def test_bits_validation():
     X, s, _ = _data(2, 16)
     with pytest.raises(ValueError):
         ops.quantize(X, s, 1, None, impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# error-feedback accumulate/compress (H + Q(Z - H))
+# ---------------------------------------------------------------------------
+
+def _ef_data(m, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    Z = jax.random.normal(key, (m, n)) * 2.0
+    H = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    s = jnp.max(jnp.abs(Z - H), axis=1)
+    u32 = jax.random.bits(jax.random.fold_in(key, 2), (m, n),
+                          dtype=jnp.uint32)
+    return Z, H, s, u32
+
+
+@pytest.mark.parametrize("m,n", [(1, 7), (5, 300), (32, 1024), (3, 513)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_ef_pallas_matches_ref_bitexact(m, n, bits, stochastic):
+    """Fused kernel and jnp reference consume the same dither and must
+    agree EXACTLY -- the codec-memory contract of docs/kernels.md."""
+    Z, H, s, u32 = _ef_data(m, n, seed=m * n)
+    u = u32 if stochastic else None
+    op = ops.ef_accumulate(Z, H, s, bits, u, impl="pallas", interpret=True)
+    orf = ops.ef_accumulate(Z, H, s, bits, u, impl="ref")
+    assert np.array_equal(np.asarray(op), np.asarray(orf))
+    assert op.dtype == Z.dtype
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_ef_accumulate_equals_quantized_residual(bits):
+    """ef_accumulate(Z, H) == H + quantize(Z - H) up to the final-add
+    rounding: the fused op keeps the accumulate in one FMA (one rounding),
+    the composition rounds the dequantized residual to f32 first. The two
+    therefore differ by at most 1 ulp of the DEQUANTIZED RESIDUAL (which,
+    under cancellation h ~ -dec, can be many ulps of the tiny sum)."""
+    Z, H, s, u32 = _ef_data(6, 256, seed=11)
+    fused = np.asarray(ops.ef_accumulate(Z, H, s, bits, u32, impl="ref"))
+    dec = np.asarray(ops.quantize(Z - H, s, bits, u32, impl="ref"))
+    composed = np.asarray(H) + dec
+    tol = np.spacing(np.maximum(np.abs(composed), np.abs(dec))
+                     .astype(np.float32))
+    assert (np.abs(fused - composed) <= tol).all()
+
+
+def test_ef_zero_residual_rows_pass_h_through():
+    """A row where Z == H (scale 0) must return H exactly -- a converged
+    client's memory never drifts."""
+    Z, H, _, u32 = _ef_data(4, 64, seed=5)
+    Z = Z.at[2].set(H[2])
+    s = jnp.max(jnp.abs(Z - H), axis=1)
+    for impl in ("ref", "pallas"):
+        out = np.asarray(ops.ef_accumulate(Z, H, s, 8, u32, impl=impl,
+                                           interpret=True))
+        np.testing.assert_array_equal(out[2], np.asarray(H)[2])
+        assert np.isfinite(out).all()
+
+
+def test_ef_error_bounded_by_residual_grid():
+    """|out - Z| <= residual grid step: the memory moves to within one
+    quantization step of the target."""
+    Z, H, s, u32 = _ef_data(8, 400, seed=3)
+    bits = 8
+    L = ref.quant_levels(bits)
+    delta = np.asarray(s)[:, None] / L
+    out = np.asarray(ops.ef_accumulate(Z, H, s, bits, u32, impl="ref"))
+    assert (np.abs(out - np.asarray(Z)) <= delta * (1 + 1e-6)).all()
+
+
+def test_ef_shape_validation():
+    Z, H, s, _ = _ef_data(2, 16)
+    from repro.kernels.quant.ef import ef_accumulate_pallas
+    with pytest.raises(ValueError, match="matching"):
+        ef_accumulate_pallas(Z, H[:1], s, 8)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,324 @@
+"""Async buffered aggregation, staleness weighting, adaptive deadlines,
+and codec error feedback (repro.sim beyond-paper policies)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fedepm, participation
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.sim import (
+    AdaptiveDeadlines,
+    CodecConfig,
+    FedSim,
+    SimConfig,
+    ef_roundtrip,
+    make_profiles,
+    round_arrivals,
+    uniform_profiles,
+)
+
+M = 16
+N = 14
+
+
+@pytest.fixture(scope="module")
+def task():
+    X, y = synth.adult_like(d=4000, n=N, seed=0)
+    batches = jax.tree_util.tree_map(jnp.asarray,
+                                     partition_iid(X, y, m=M, seed=0))
+    return batches, make_logistic_loss()
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _cfg(**kw):
+    kw.setdefault("eps_dp", 0.0)
+    return fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting
+# ---------------------------------------------------------------------------
+
+def test_staleness_weight_units():
+    """gamma(0) must be EXACTLY 1 (the bit-for-bit sync recovery hinges on
+    it), monotone decreasing in s, and exp=0 disables down-weighting."""
+    assert participation.staleness_weight(0, 0.5) == 1.0
+    assert participation.staleness_weight(0, 2.0) == 1.0
+    g = [participation.staleness_weight(s, 0.5) for s in range(5)]
+    assert all(a > b for a, b in zip(g, g[1:]))
+    assert participation.staleness_weight(7, 0.0) == 1.0
+    # FedBuff's 1/sqrt(1+s) convention at exp=1/2
+    assert participation.staleness_weight(3, 0.5) == pytest.approx(0.5)
+
+
+def test_async_buffer_cohort_is_sync_bitforbit(task):
+    """Acceptance criterion: buffer = cohort size + zero staleness (full
+    availability, deterministic latency) reproduces the synchronous
+    trajectory bit-for-bit, DP noise stream included."""
+    batches, loss = task
+    cfg = _cfg(eps_dp=0.1, sensitivity_clip=1.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    sref = s0
+    for _ in range(6):
+        sref, _ = step(sref)
+
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, sim=SimConfig(policy="async"))
+    sim.run(6)
+
+    assert _tree_equal(sim.state.w_tau, sref.w_tau)
+    assert _tree_equal(sim.state.W, sref.W)
+    assert _tree_equal(sim.state.Z, sref.Z)
+    assert int(sim.state.k) == int(sref.k)
+    assert np.array_equal(np.asarray(sim.state.key), np.asarray(sref.key))
+    # every contribution merged fresh: zero staleness throughout
+    assert all(m.staleness_max == 0 for m in sim.metrics)
+    assert all(m.n_aggregated == 8 for m in sim.metrics)  # rho*m
+
+    # the async event clock must equal the sync round clock too
+    sync = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                  loss_fn=loss, sim=SimConfig(policy="sync"))
+    sync.run(6)
+    assert sim.t == pytest.approx(sync.t)
+
+
+def test_async_small_buffer_staleness_and_progress(task):
+    """buffer < cohort under heavy-tail latency: aggregations interleave
+    cohorts (staleness > 0 appears), versions advance per event, the
+    objective still descends, and uploads are billed per merge."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=make_profiles(M, seed=3),
+                 sim=SimConfig(policy="async", buffer_size=4,
+                               latency="pareto", latency_alpha=1.1, seed=7))
+    sim.run(12)
+    assert sim._version == 12
+    assert all(m.n_aggregated == 4 for m in sim.metrics)
+    assert max(m.staleness_max for m in sim.metrics) >= 1
+    assert sim.ledger.total_up == 12 * 4 * N * 4  # 4 fp32 uploads per event
+    f = float(fedepm.global_objective(loss, sim.state.w_tau, batches)) / M
+    assert f < math.log(2.0)  # descended from f(0) = ln 2
+    # simulated time is strictly increasing across events
+    ts = [m.t_total for m in sim.metrics]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+
+def test_async_all_offline_abandons(task):
+    """An unreachable fleet: the step gives up after its dry dispatches,
+    charges the broadcasts, and leaves the algorithm state untouched."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss,
+                 profiles=make_profiles(M, seed=1, availability=0.0),
+                 sim=SimConfig(policy="async", seed=2))
+    m = sim.step()
+    assert m.abandoned and m.n_aggregated == 0
+    assert m.n_dropped == m.n_contacted > 0
+    assert _tree_equal(sim.state.W, s0.W)
+    assert np.array_equal(np.asarray(sim.state.key), np.asarray(s0.key))
+    assert sim.ledger.total_down > 0
+    assert sim.ledger.total_up == 0
+
+
+def test_async_rejects_bad_buffer(task):
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    with pytest.raises(ValueError, match="buffer_size"):
+        FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+               loss_fn=loss, sim=SimConfig(policy="async", buffer_size=-1))
+    with pytest.raises(ValueError, match="policy"):
+        FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+               loss_fn=loss, sim=SimConfig(policy="fedbuff"))
+
+
+# ---------------------------------------------------------------------------
+# adaptive per-client deadlines
+# ---------------------------------------------------------------------------
+
+def test_adaptive_ewma_converges_deterministic(task):
+    """Under deterministic latencies the EWMA locks onto each client's true
+    report time, cutoffs are finite for every observed client, nobody is
+    dropped (slack > 1), and the trajectory is bit-for-bit sync."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    profiles = make_profiles(M, seed=5)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=profiles,
+                 sim=SimConfig(policy="adaptive"))
+    sync = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                  loss_fn=loss, profiles=profiles,
+                  sim=SimConfig(policy="sync"))
+    sim.run(6)
+    sync.run(6)
+    assert _tree_equal(sim.state.W, sync.state.W)
+    assert _tree_equal(sim.state.Z, sync.state.Z)
+    assert sum(m.n_dropped for m in sim.metrics) == 0
+    assert sim.t == pytest.approx(sync.t)
+
+    # deterministic latency => arrivals are a fixed function of the profile;
+    # every client selected at least once must have ewma == its true time
+    truth = round_arrivals(profiles, np.random.default_rng(0),
+                           lambda rng, m: np.ones(m),
+                           work_flops=sim._work,
+                           down_bytes=sim.down_bytes_per_client,
+                           up_bytes=sim.up_bytes_per_client)
+    seen = np.isfinite(sim.deadlines.ewma)
+    assert seen.any()
+    np.testing.assert_allclose(sim.deadlines.ewma[seen], truth[seen],
+                               rtol=1e-12)
+    assert np.isfinite(sim.deadlines.cutoffs()[seen]).all()
+
+
+def test_adaptive_tracker_censors_and_drops_outliers():
+    """Unit-level tracker semantics: cutoffs budget slack*ewma, a straggler
+    past its budget is dropped by arrival_mask's per-client deadline path,
+    and its (censored) observation is the budget actually waited."""
+    tr = AdaptiveDeadlines(4, beta=0.5, slack=2.0)
+    cand = np.ones(4, bool)
+    assert np.isinf(tr.cutoffs()).all()          # no evidence yet
+    tr.observe(cand, np.array([1.0, 1.0, 1.0, np.inf]))
+    np.testing.assert_allclose(tr.cutoffs()[:3], 2.0)
+    assert np.isinf(tr.cutoffs()[3])             # offline: still unobserved
+
+    # client 2 stalls at 10s: per-client mask drops exactly it
+    arr = np.array([1.0, 1.5, 10.0, 1.0])
+    mask = participation.arrival_mask(jnp.asarray(cand), jnp.asarray(arr),
+                                      jnp.asarray(tr.cutoffs()))
+    assert mask.tolist() == [True, True, False, True]
+
+    tr.observe(cand, arr)
+    # censored: the server only waited 2.0 for client 2, not 10.0
+    assert tr.ewma[2] == pytest.approx(0.5 * 1.0 + 0.5 * 2.0)
+    # client 3's first finite observation seeds its EWMA directly
+    assert tr.ewma[3] == pytest.approx(1.0)
+
+
+def test_adaptive_validation():
+    with pytest.raises(ValueError, match="slack"):
+        AdaptiveDeadlines(4, slack=0.5)
+    with pytest.raises(ValueError, match="beta"):
+        AdaptiveDeadlines(4, beta=0.0)
+
+
+# ---------------------------------------------------------------------------
+# codec error feedback
+# ---------------------------------------------------------------------------
+
+def test_ef_roundtrip_drains_static_residual():
+    """bits=0 top-k EF on a FIXED upload: each pass transmits the largest
+    remaining residual coordinates exactly, so after ceil(1/frac) passes
+    the shared memory equals the upload BIT-FOR-BIT -- the contraction the
+    memoryless codec cannot achieve (it forgets the residual each pass)."""
+    key = jax.random.PRNGKey(0)
+    z = {"w": jax.random.normal(key, (3, 8, 5))}
+    codec = CodecConfig(topk_frac=0.25, bits=0, error_feedback=True)
+    h = jax.tree_util.tree_map(jnp.zeros_like, z)
+    passes = math.ceil(1.0 / codec.topk_frac)
+    errs = []
+    for t in range(passes):
+        h = ef_roundtrip(z, h, jax.random.fold_in(key, t), codec)
+        errs.append(max(float(jnp.max(jnp.abs(a - b)))
+                        for a, b in zip(jax.tree_util.tree_leaves(h),
+                                        jax.tree_util.tree_leaves(z))))
+    assert all(b <= a for a, b in zip(errs, errs[1:]))  # monotone drain
+    assert _tree_equal(h, z)                             # fully drained
+
+
+def test_ef_dense_raw_is_identity(task):
+    """topk=1, bits=0 + EF: the residual goes over the wire exactly, so the
+    simulated trajectory equals the codec-free one bit-for-bit."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    plain = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                   loss_fn=loss, sim=SimConfig(policy="sync"))
+    ef = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                loss_fn=loss,
+                sim=SimConfig(policy="sync",
+                              codec=CodecConfig(topk_frac=1.0, bits=0,
+                                                error_feedback=True)))
+    plain.run(4)
+    ef.run(4)
+    assert _tree_equal(plain.state.Z, ef.state.Z)
+    assert _tree_equal(plain.state.W, ef.state.W)
+
+
+def test_ef_closes_compression_gap(task):
+    """The contraction criterion: with an aggressive codec the EF run ends
+    much closer to the uncompressed objective than the memoryless run --
+    the memoryless bias plateaus, the EF residual drains as the iterates
+    stabilise."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    def final_f(codec):
+        sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                     loss_fn=loss, sim=SimConfig(policy="sync", codec=codec))
+        sim.run(20)
+        return float(fedepm.global_objective(
+            loss, sim.state.w_tau, batches)) / M
+
+    f_raw = final_f(None)
+    f_mem = final_f(CodecConfig(topk_frac=0.25, bits=0))
+    f_ef = final_f(CodecConfig(topk_frac=0.25, bits=0, error_feedback=True))
+    gap_mem = abs(f_mem - f_raw)
+    gap_ef = abs(f_ef - f_raw)
+    assert gap_ef < 0.5 * gap_mem
+    assert f_ef < math.log(2.0)  # and it actually descended
+
+
+def test_ef_works_in_async_mode(task):
+    """EF + async compose: memory rows update per merged contribution and
+    the compressed async run still descends."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=make_profiles(M, seed=3),
+                 sim=SimConfig(policy="async", buffer_size=4,
+                               latency="pareto", latency_alpha=1.2, seed=9,
+                               codec=CodecConfig(topk_frac=0.5, bits=8,
+                                                 error_feedback=True)))
+    sim.run(10)
+    f = float(fedepm.global_objective(loss, sim.state.w_tau, batches)) / M
+    assert f < math.log(2.0)
+    # the EF memory departed from its all-zeros init for merged clients
+    h0 = jax.tree_util.tree_map(jnp.zeros_like, s0.Z)
+    assert not _tree_equal(sim._H, h0)
+    # compressed uploads billed at the encoded size
+    assert 0 < sim.ledger.total_up < 10 * 4 * N * 4
+
+
+def test_async_uniform_fleet_event_times(task):
+    """Deterministic homogeneous fleet: every aggregation event waits for a
+    full fresh cohort, so event times step by one round-trip each."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=uniform_profiles(M),
+                 sim=SimConfig(policy="async"))
+    sim.run(3)
+    durs = [m.t_round for m in sim.metrics]
+    assert durs[0] > 0
+    assert durs[1] == pytest.approx(durs[0])
+    assert durs[2] == pytest.approx(durs[0])
