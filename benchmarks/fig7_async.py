@@ -17,25 +17,41 @@ Two experiments on the paper logreg task under a heavy-tail (Pareto) fleet:
    to the uncompressed async run. Headline: error feedback shrinks the
    memoryless bias by an order of magnitude at identical wire bytes.
 
+3. Cross-algorithm trace cells: FedEPM and SFedAvg race sync vs
+   client-level async on a fleet RESAMPLED FROM A REAL DEVICE TRACE
+   (tests/fixtures/device_trace.csv, sim/clients.py::LatencyTrace) under
+   identical async semantics -- same event engine, concurrency cap
+   (cohort/2), buffer (cohort/2) and staleness weighting; the baseline's
+   eq. (34) mean anchors on the cohort via the agg_mask hook. Each
+   algorithm reports simulated time to ITS OWN sync-run objective, so the
+   async-vs-sync speedup is comparable across algorithms.
+
 Rows: fig7/<policy>/time_to_target,<sim_seconds * 1e6>,<derived>
       fig7/async/speedup_vs_sync,<factor>
       fig7/codec/gap_{memoryless,error_feedback},<|f - f_raw|>
+      fig7/trace/<alg>/time_to_target,<sim_seconds * 1e6>,<derived>
+      fig7/trace/<alg>/speedup_vs_sync,<factor>
 """
 from __future__ import annotations
 
+import argparse
+import json
 import math
+import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fedepm
+from repro.core import baselines, fedepm
 from repro.core.tasks import make_logistic_loss
 from repro.data import synth
 from repro.data.partition import partition_iid
 from repro.sim import (
     CodecConfig,
     FedSim,
+    LatencyTrace,
     SimConfig,
     client_work_flops,
     make_latency_model,
@@ -43,6 +59,12 @@ from repro.sim import (
     round_arrivals,
     tree_client_bytes,
 )
+
+TRACE_CSV = (pathlib.Path(__file__).resolve().parent.parent
+             / "tests" / "fixtures" / "device_trace.csv")
+
+# the one quick/smoke profile, shared by `--quick` and benchmarks/run.py
+QUICK_KW = dict(d=2000, m=16, rounds=12)
 
 
 def _calibrate_deadline(profiles, alpha, work, down_b, up_b, q: float = 0.8,
@@ -57,11 +79,13 @@ def _calibrate_deadline(profiles, alpha, work, down_b, up_b, q: float = 0.8,
 
 
 def _build(policy, *, cfg, state, batches, loss, profiles, seed, alpha,
-           deadline=math.inf, buffer_size=0, codec=None):
+           deadline=math.inf, buffer_size=0, codec=None, alg="fedepm",
+           max_concurrency=0):
     sim_cfg = SimConfig(policy=policy, deadline=deadline,
                         latency="pareto", latency_alpha=alpha, seed=seed,
-                        buffer_size=buffer_size, codec=codec)
-    return FedSim(alg="fedepm", cfg=cfg, state=state, batches=batches,
+                        buffer_size=buffer_size, codec=codec,
+                        max_concurrency=max_concurrency)
+    return FedSim(alg=alg, cfg=cfg, state=state, batches=batches,
                   loss_fn=loss, profiles=profiles, sim=sim_cfg)
 
 
@@ -79,7 +103,8 @@ def _race(sim, fobj, m, f_target: float, max_events: int):
 
 
 def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
-        rounds: int = 60, n: int = 14, seed: int = 0, alpha: float = 1.2):
+        rounds: int = 60, n: int = 14, seed: int = 0, alpha: float = 1.2,
+        trace_file=TRACE_CSV):
     X, y = synth.adult_like(d=d, n=n, seed=seed)
     batches = jax.tree_util.tree_map(
         jnp.asarray, partition_iid(X, y, m=m, seed=seed))
@@ -163,9 +188,62 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         else gaps["memoryless"] / gaps["error_feedback"],
         f"memoryless={gaps['memoryless']:.2e};"
         f"ef={gaps['error_feedback']:.2e}"))
+
+    # -- 3. cross-algorithm cells on a trace-resampled fleet ---------------
+    # identical client-level async semantics for every algorithm: same
+    # event engine, concurrency cap, buffer and staleness weighting; the
+    # baselines anchor eq. (34) on the cohort via the agg_mask round hook
+    trace_prof = LatencyTrace.load(trace_file).sample_profiles(m, seed=seed)
+    cap = max(1, cohort // 2)
+    for alg in ("fedepm", "sfedavg"):
+        if alg == "fedepm":
+            acfg, astate = cfg, state
+        else:
+            acfg = baselines.BaselineConfig(m=m, k0=k0, rho=rho, eps_dp=0.0)
+            astate = baselines.init_state(jax.random.PRNGKey(seed),
+                                          jnp.zeros(n), acfg)
+        amk = dict(cfg=acfg, state=astate, batches=batches, loss=loss,
+                   profiles=trace_prof, seed=seed, alpha=alpha, alg=alg)
+        tsync = _build("sync", **amk)
+        for _ in range(rounds):
+            tsync.step()
+        f_target_a = float(fobj(tsync.state.w_tau)) / m
+        tasync = _build("async", buffer_size=buffer_k,
+                        max_concurrency=cap, **amk)
+        t_hit, events, f = _race(tasync, fobj, m, f_target_a,
+                                 math.ceil(rounds * 3 * cohort / buffer_k))
+        stale = max((mm.staleness_max for mm in tasync.metrics), default=0)
+        rows.append((
+            f"fig7/trace/{alg}/time_to_target", (t_hit or 0.0) * 1e6,
+            f"f={f:.6f};f_target={f_target_a:.6f};events={events};"
+            f"cap={cap};buffer={buffer_k};staleness_max={stale};"
+            f"trace={pathlib.Path(str(trace_file)).name}"
+            + ("" if t_hit else ";NOT_REACHED")))
+        rows.append((
+            f"fig7/trace/{alg}/speedup_vs_sync",
+            0.0 if not t_hit else tsync.t / t_hit,
+            f"sync={tsync.t:.4g}s;" + (
+                f"async={t_hit:.4g}s" if t_hit else "async=NOT_REACHED")))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Fig. 7: async client-level aggregation benchmarks")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced task + short round budget (CI smoke)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON records to this path")
+    args = ap.parse_args(argv)
+    rows = run(**(QUICK_KW if args.quick else {}))
+    for r in rows:
         print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": a, "value": b, "derived": c}
+                       for a, b, c in rows], f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,8 +49,8 @@ def main(argv=None):
             d=d, m=16 if args.quick else 32,
             rounds=30 if args.quick else 80),
         "fig7": lambda: fig7_async.run(
-            d=d, m=16 if args.quick else 32,
-            rounds=20 if args.quick else 60),
+            **(fig7_async.QUICK_KW if args.quick
+               else dict(d=d, m=32, rounds=60))),
     }
     if args.only:
         keep = set(args.only.split(","))

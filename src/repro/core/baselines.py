@@ -113,15 +113,24 @@ def _noisy_upload(k_noise, W_upd, g, mask, cfg: BaselineConfig, k):
 
 
 def sfedavg_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
-                  cfg: BaselineConfig, mask: jax.Array | None = None):
+                  cfg: BaselineConfig, mask: jax.Array | None = None,
+                  agg_mask: jax.Array | None = None):
     """k0 iterations of SFedAvg (Algorithm 3 + eq. (35)).
 
     ``mask`` optionally supplies the participation set externally (see
-    fedepm.fedepm_round); the key split is unchanged either way."""
+    fedepm.fedepm_round); the key split is unchanged either way.
+    ``agg_mask`` optionally decouples eq. (34)'s aggregation support from
+    the participation set: the broadcast point averages the Z rows of
+    ``agg_mask`` (default: ``mask``, the paper's selected-mean) while only
+    ``mask`` clients compute and upload. The async client-level scheduler
+    (repro.sim) uses this to anchor a sub-cohort dispatch group's broadcast
+    on its whole cohort, mirroring how FedEPM's ENS aggregates every
+    client's latest upload."""
     key, k_sel, k_noise = jax.random.split(state.key, 3)
     if mask is None:
         mask = sample_uniform(k_sel, cfg.m, cfg.rho)
-    w_new = _aggregate_selected_mean(state.Z, mask)
+    w_new = _aggregate_selected_mean(
+        state.Z, mask if agg_mask is None else agg_mask)
     grad_fn = jax.grad(loss_fn)
 
     def client(wi, b):
@@ -149,15 +158,19 @@ def sfedavg_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
 
 
 def sfedprox_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
-                   cfg: BaselineConfig, mask: jax.Array | None = None):
+                   cfg: BaselineConfig, mask: jax.Array | None = None,
+                   agg_mask: jax.Array | None = None):
     """k0 iterations of SFedProx (Algorithm 3 + (36), inner solver Alg. 4).
 
     ``mask`` optionally supplies the participation set externally (see
-    fedepm.fedepm_round); the key split is unchanged either way."""
+    fedepm.fedepm_round); the key split is unchanged either way.
+    ``agg_mask`` decouples eq. (34)'s aggregation support from the
+    participation set exactly as in ``sfedavg_round``."""
     key, k_sel, k_noise = jax.random.split(state.key, 3)
     if mask is None:
         mask = sample_uniform(k_sel, cfg.m, cfg.rho)
-    w_new = _aggregate_selected_mean(state.Z, mask)
+    w_new = _aggregate_selected_mean(
+        state.Z, mask if agg_mask is None else agg_mask)
     grad_fn = jax.grad(loss_fn)
 
     def client(wi, b):

@@ -14,16 +14,23 @@ Usage:
       --topk 0.25 --bits 8 --error-feedback   # compressed, EF memory
   python -m repro.launch.simulate --alg fedepm --aggregation async \
       --buffer-size 8 --latency pareto        # FedBuff-style buffered
+  python -m repro.launch.simulate --alg sfedavg --aggregation async \
+      --max-concurrency 6 --buffer-size 4 \
+      --trace-file tests/fixtures/device_trace.csv   # client-level dispatch
   python -m repro.launch.simulate --alg sfedavg --aggregation overselect \
       --overselect 1.5 --latency lognormal
 
 Aggregation modes: sync (wait for all), deadline (drop stragglers past
 --deadline, eq. (22) carry-through), adaptive (per-client EWMA-learned
 deadlines), overselect (contact a uniform candidate set at rate
-rho*--overselect, keep the first ceil(rho*m) arrivals), async (buffered:
-aggregate every --buffer-size arrivals with staleness-weighted merges;
-one reported "round" = one aggregation event). ``--policy`` is accepted
-as an alias of ``--aggregation``. Full semantics: docs/sim.md.
+rho*--overselect, keep the first ceil(rho*m) arrivals), async (client-
+level dispatch: per-client start/upload events with an optional
+--max-concurrency in-flight cap, aggregate every --buffer-size arrivals
+with staleness-weighted merges; one reported "round" = one aggregation
+event; all three algorithms run under identical async semantics).
+``--policy`` is accepted as an alias of ``--aggregation``. Device fleets
+come from --trace-file (resampled real logs) or the synthetic lognormal
+profiles. Full semantics: docs/sim.md.
 """
 from __future__ import annotations
 
@@ -41,7 +48,13 @@ from repro.core import baselines, fedepm
 from repro.core.tasks import accuracy_logistic, make_logistic_loss
 from repro.data import synth
 from repro.data.partition import partition_iid
-from repro.sim import CodecConfig, FedSim, SimConfig, make_profiles
+from repro.sim import (
+    CodecConfig,
+    FedSim,
+    LatencyTrace,
+    SimConfig,
+    make_profiles,
+)
 
 
 def build_sim(args) -> tuple[FedSim, dict]:
@@ -73,9 +86,14 @@ def build_sim(args) -> tuple[FedSim, dict]:
         latency=args.latency, latency_sigma=args.latency_sigma,
         latency_alpha=args.latency_alpha, seed=args.seed, codec=codec,
         buffer_size=args.buffer_size, staleness_exp=args.staleness_exp,
+        max_concurrency=args.max_concurrency,
         deadline_slack=args.deadline_slack, ewma_beta=args.ewma_beta)
-    profiles = make_profiles(args.m, seed=args.seed,
-                             availability=args.availability)
+    if args.trace_file:
+        profiles = LatencyTrace.load(args.trace_file).sample_profiles(
+            args.m, seed=args.seed)
+    else:
+        profiles = make_profiles(args.m, seed=args.seed,
+                                 availability=args.availability)
     sim = FedSim(alg=args.alg, cfg=cfg, state=state, batches=batches,
                  loss_fn=loss, profiles=profiles, sim=sim_cfg)
     aux = {"X": X, "y": y, "batches": batches, "loss": loss, "n": args.n}
@@ -157,6 +175,10 @@ def main(argv=None):
                          "(0 = cohort size, which recovers sync exactly)")
     ap.add_argument("--staleness-exp", type=float, default=0.5,
                     help="async: stale merges weighted (1+s)^-exp")
+    ap.add_argument("--max-concurrency", type=int, default=0,
+                    help="async: cap on in-flight clients; dispatches past "
+                         "the cap queue until an upload frees a slot "
+                         "(0 = unlimited, which dispatches whole cohorts)")
     ap.add_argument("--deadline-slack", type=float, default=2.0,
                     help="adaptive: per-client wait budget = slack * EWMA")
     ap.add_argument("--ewma-beta", type=float, default=0.3,
@@ -169,7 +191,15 @@ def main(argv=None):
                     choices=["deterministic", "lognormal", "pareto"])
     ap.add_argument("--latency-sigma", type=float, default=0.5)
     ap.add_argument("--latency-alpha", type=float, default=1.2)
-    ap.add_argument("--availability", type=float, default=1.0)
+    ap.add_argument("--availability", type=float, default=1.0,
+                    help="P(client reachable per round) for the synthetic "
+                         "profiles; a --trace-file fleet carries its own "
+                         "availability column instead")
+    ap.add_argument("--trace-file", default=None,
+                    help="CSV/JSON device trace; the fleet is resampled "
+                         "from it instead of the synthetic lognormal "
+                         "profiles (schema: sim/clients.py::LatencyTrace; "
+                         "overrides --availability)")
     ap.add_argument("--m", type=int, default=50)
     ap.add_argument("--n", type=int, default=14)
     ap.add_argument("--d", type=int, default=4000,
@@ -200,6 +230,9 @@ def main(argv=None):
     if args.error_feedback and args.topk >= 1.0 and args.bits == 0:
         ap.error("--error-feedback needs a lossy codec: set --topk < 1 "
                  "and/or --bits > 0")
+    if args.trace_file and args.availability != 1.0:
+        ap.error("--availability conflicts with --trace-file: the trace's "
+                 "own availability column defines the fleet")
 
     summary = run(args)
     if args.json:

@@ -5,6 +5,7 @@ functions. Architecture notes live in docs/sim.md."""
 from repro.sim.clients import (          # noqa: F401
     AdaptiveDeadlines,
     ClientProfiles,
+    LatencyTrace,
     make_latency_model,
     make_profiles,
     round_arrivals,

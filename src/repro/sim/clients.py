@@ -4,8 +4,9 @@ The paper frames FedEPM as addressing four *systems* issues -- communication
 efficiency, computational complexity, stragglers, privacy -- but the core
 round functions only see a boolean participation mask. This module supplies
 the missing device model: each client has a static profile (relative compute
-speed, up/down bandwidth, availability) and a per-round stochastic latency
-multiplier drawn from a pluggable distribution. A round's simulated arrival
+speed, up/down bandwidth, availability) -- synthesized (``make_profiles``)
+or resampled from a real device log (``LatencyTrace``) -- and a per-round
+stochastic latency multiplier drawn from a pluggable distribution. A round's simulated arrival
 time for client i decomposes as
 
     t_i = down_bytes / bw_down_i                    (receive w^{tau+1})
@@ -29,7 +30,9 @@ Latency distributions (``make_latency_model``):
 """
 from __future__ import annotations
 
+import csv
 import dataclasses
+import json
 from typing import Callable
 
 import numpy as np
@@ -85,6 +88,134 @@ def uniform_profiles(m: int) -> ClientProfiles:
     return ClientProfiles(speed=np.ones(m), bw_up=np.full(m, 1.25e6),
                           bw_down=np.full(m, 1e7),
                           availability=np.ones(m))
+
+
+_TRACE_FIELDS = ("speed", "bw_up", "bw_down", "availability")
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyTrace:
+    """Empirical per-device profile table loaded from real fleet logs.
+
+    A trace is a flat table of device measurements -- one entry per device
+    model observed in a production log -- from which a simulated fleet is
+    built by RESAMPLING: each of the ``m`` clients is assigned one trace
+    entry (without replacement while the trace is large enough, i.i.d.
+    bootstrap otherwise), so the simulated speed/bandwidth/availability
+    marginals match the measured fleet instead of a parametric lognormal
+    (``make_profiles``). Stochastic per-round jitter still comes from the
+    latency model on top.
+
+    Schema (CSV header columns / JSON object keys), one row per device:
+
+      device        free-form model name (metadata; optional, default
+                    ``device-<row>``)
+      speed         relative compute speed, 1.0 = NOMINAL_FLOPS (required)
+      bw_up         uplink bytes/s (required)
+      bw_down       downlink bytes/s (required)
+      availability  P(online in a given round), in (0, 1] (optional,
+                    default 1.0)
+
+    JSON files may be either a bare list of such objects or
+    ``{"entries": [...]}``. A real-shaped fixture ships at
+    ``tests/fixtures/device_trace.csv``.
+    """
+
+    device: tuple
+    speed: np.ndarray
+    bw_up: np.ndarray
+    bw_down: np.ndarray
+    availability: np.ndarray
+
+    def __post_init__(self):
+        n = len(self.device)
+        if n == 0:
+            raise ValueError("empty trace: no device entries")
+        for f in _TRACE_FIELDS:
+            v = getattr(self, f)
+            if len(v) != n:
+                raise ValueError(f"trace field {f!r} has {len(v)} entries, "
+                                 f"expected {n}")
+            if not np.isfinite(v).all() or (v <= 0).any():
+                raise ValueError(f"trace field {f!r} must be finite and > 0")
+        if (self.availability > 1.0).any():
+            raise ValueError("availability must be in (0, 1]")
+
+    @property
+    def n_entries(self) -> int:
+        return len(self.device)
+
+    @classmethod
+    def from_rows(cls, rows: list[dict]) -> "LatencyTrace":
+        """Build from a list of row dicts (the CSV/JSON loaders' target)."""
+        def col(f, default=None):
+            out = []
+            for i, r in enumerate(rows):
+                if f in r and r[f] not in (None, ""):
+                    out.append(float(r[f]))
+                elif default is not None:
+                    out.append(default)
+                else:
+                    raise ValueError(
+                        f"trace row {i} is missing required field {f!r}")
+            return np.asarray(out, np.float64)
+
+        return cls(
+            device=tuple(str(r.get("device", f"device-{i}"))
+                         for i, r in enumerate(rows)),
+            speed=col("speed"),
+            bw_up=col("bw_up"),
+            bw_down=col("bw_down"),
+            availability=col("availability", default=1.0),
+        )
+
+    @classmethod
+    def from_csv(cls, path) -> "LatencyTrace":
+        with open(path, newline="") as f:
+            return cls.from_rows(list(csv.DictReader(f)))
+
+    @classmethod
+    def from_json(cls, path) -> "LatencyTrace":
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, dict):
+            data = data.get("entries")
+        if not isinstance(data, list):
+            raise ValueError(f"{path}: expected a JSON list of trace rows "
+                             f"or {{'entries': [...]}}")
+        return cls.from_rows(data)
+
+    @classmethod
+    def load(cls, path) -> "LatencyTrace":
+        """Dispatch on file extension: .csv or .json."""
+        p = str(path)
+        if p.endswith(".csv"):
+            return cls.from_csv(path)
+        if p.endswith(".json"):
+            return cls.from_json(path)
+        raise ValueError(f"unknown trace format {path!r} (want .csv/.json)")
+
+    def assign(self, m: int, seed: int = 0,
+               replace: bool | None = None) -> np.ndarray:
+        """(m,) trace-entry index per client. Without replacement while the
+        trace covers the fleet (every client a distinct measured device),
+        bootstrap otherwise; ``replace`` forces one or the other."""
+        if replace is None:
+            replace = m > self.n_entries
+        if not replace and m > self.n_entries:
+            raise ValueError(f"cannot assign {m} clients from "
+                             f"{self.n_entries} entries without replacement")
+        rng = np.random.default_rng(seed)
+        return rng.choice(self.n_entries, size=m, replace=replace)
+
+    def sample_profiles(self, m: int, seed: int = 0,
+                        replace: bool | None = None) -> ClientProfiles:
+        """Resample the trace into ``ClientProfiles`` for an m-client fleet."""
+        idx = self.assign(m, seed=seed, replace=replace)
+        return ClientProfiles(
+            speed=self.speed[idx], bw_up=self.bw_up[idx],
+            bw_down=self.bw_down[idx],
+            availability=self.availability[idx])
 
 
 def make_latency_model(kind: str = "deterministic", *, sigma: float = 0.5,

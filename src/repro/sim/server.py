@@ -25,28 +25,51 @@ arrivals into (participation mask, simulated round duration):
                  the last kept arrival.
   async       -- FedBuff-style buffered asynchrony; see below.
 
-Asynchronous buffered aggregation (policy="async")
---------------------------------------------------
-The server no longer runs in rounds. It dispatches whole cohorts (drawn
-from the SAME key stream as sync selection), lets uploads arrive as events
-over simulated time, and applies an aggregation once ``buffer_size``
-contributions are in. Clients therefore train on STALE broadcasts: a
-contribution dispatched at server version v and merged at version v' has
-staleness s = v' - v and is folded into the server's Z with weight
-gamma = (1 + s)^(-staleness_exp) (participation.staleness_weight, the
-FedBuff convention), i.e. Z_i <- gamma * z_i + (1 - gamma) * Z_i. After
-each aggregation the server tops the in-flight pool back up to one cohort,
-so stragglers from old cohorts overlap fresh work instead of gating it.
-One ``step()`` is one aggregation event.
+Asynchronous client-level dispatch (policy="async")
+---------------------------------------------------
+The server no longer runs in rounds, and -- since the client-level
+refactor -- no longer dispatches in cohort lockstep either. It keeps ONE
+time-ordered event queue of per-client events:
 
-With buffer_size = cohort size, full availability and no codec, every
-contribution merges at staleness 0 (gamma = 1 exactly), and the event
-sequence degenerates to dispatch -> drain -> merge -> dispatch: the
-trajectory is BIT-FOR-BIT the synchronous one (tests/test_sim_async.py).
-A dispatch whose cohort is entirely offline leaves the algorithm state
+  start  -- client i receives the broadcast and begins local work. Fires
+            only while the number of in-flight clients is below
+            ``max_concurrency`` (0 = unlimited); slot-blocked starts wait
+            in a FIFO and fire the moment an upload frees a slot.
+  upload -- client i's contribution arrives at the server and is appended
+            to the aggregation buffer.
+
+Selection stays on the SAME key stream as sync: whenever the system runs
+below one cohort of work (at step entry, or when the queue drains
+mid-fill) the server draws the next cohort mask and queues one start
+event per live member; unreachable members cost their broadcast bytes
+immediately and never occupy a slot. Start events that fire at the same
+instant batch into one round-function call (one key advance), so an
+uncapped server dispatches whole cohorts exactly like the old cohort
+engine, while a capped server trickles the cohort out client by client --
+each later client trains on the broadcast CURRENT at its own start time,
+not the one its cohort-mates saw.
+
+An aggregation applies once ``buffer_size`` contributions are in. Clients
+therefore train on STALE broadcasts: a contribution dispatched at server
+version v and merged at version v' has staleness s = v' - v and is folded
+into the server's Z with weight gamma = (1 + s)^(-staleness_exp)
+(participation.staleness_weight, the FedBuff convention), i.e.
+Z_i <- gamma * z_i + (1 - gamma) * Z_i. One ``step()`` is one aggregation
+event. For the BASELINE algorithms each dispatch group additionally
+anchors its broadcast on the live membership of the newest cohort draw
+(``agg_mask`` hook in core/baselines.py): eq. (34)'s selected-mean then
+averages over the whole cohort's latest uploads instead of degenerating
+to a one-client mean when the concurrency cap splits a cohort.
+
+With max_concurrency >= cohort, buffer_size = cohort, full availability
+and no codec, every start fires instantly, every contribution merges at
+staleness 0 (gamma = 1 exactly), and the event sequence degenerates to
+dispatch -> drain -> merge -> dispatch: the trajectory is BIT-FOR-BIT the
+synchronous one (tests/test_sim_async.py, for FedEPM and the baselines).
+A cohort draw that is entirely offline leaves the algorithm state
 (including the key) untouched, exactly like an abandoned sync round; after
-_MAX_DRY_DISPATCHES consecutive such dispatches the step gives up and
-reports abandoned=True.
+_MAX_DRY_DISPATCHES consecutive such draws the step gives up and reports
+abandoned=True.
 
 The mask is fed into the round via ``fedepm_round(..., mask=...)`` -- the
 selection key stream is unchanged, so with policy="sync", full availability,
@@ -62,6 +85,7 @@ has no cutoff to wait for and costs zero simulated time.)
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import heapq
@@ -86,8 +110,12 @@ from repro.sim.transport import (
 
 _POLICIES = ("sync", "deadline", "adaptive", "overselect", "async")
 
-# async: consecutive all-offline cohort broadcasts before a step gives up
+# async: consecutive all-offline cohort draws before a step gives up
 _MAX_DRY_DISPATCHES = 3
+
+# event-queue kinds (heap entries sort by (time, push sequence, kind))
+_EV_START = 0    # payload: (client index, round-trip duration seconds)
+_EV_UPLOAD = 1   # payload: _Contribution
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +131,7 @@ class SimConfig:
     # async (buffered) aggregation
     buffer_size: int = 0            # contributions per aggregation; 0 = cohort
     staleness_exp: float = 0.5      # gamma = (1 + staleness)^-exp
+    max_concurrency: int = 0        # async: in-flight client cap; 0 = no cap
     # adaptive per-client deadlines
     deadline_slack: float = 2.0     # wait budget = slack * ewma_i
     ewma_beta: float = 0.3          # EWMA weight of the newest observation
@@ -236,6 +265,9 @@ class FedSim:
         if sim.buffer_size < 0:
             raise ValueError(f"buffer_size must be >= 0 (0 = cohort size); "
                              f"got {sim.buffer_size}")
+        if sim.max_concurrency < 0:
+            raise ValueError(f"max_concurrency must be >= 0 (0 = unlimited); "
+                             f"got {sim.max_concurrency}")
         round_fn, mask_fn = _ALGS[alg]
         self.alg = alg
         self.cfg = cfg
@@ -253,6 +285,16 @@ class FedSim:
 
         self._step = jax.jit(
             lambda s, mask: round_fn(s, batches, loss_fn, cfg, mask))
+        # baselines accept a decoupled aggregation anchor (agg_mask) so the
+        # async client-level scheduler can average eq. (34) over the whole
+        # cohort while only a sub-group computes; fedepm's ENS already
+        # aggregates every Z row, so no anchor is needed there
+        if alg == "fedepm":
+            self._step_agg = None
+        else:
+            self._step_agg = jax.jit(
+                lambda s, mask, agg: round_fn(s, batches, loss_fn, cfg,
+                                              mask, agg_mask=agg))
         self._default_mask = jax.jit(lambda s: mask_fn(s, cfg))
         if sim.policy == "overselect":
             # over-selection draws its own (bigger) uniform candidate set;
@@ -310,13 +352,19 @@ class FedSim:
 
         if sim.policy == "async":
             # cohort size of the (uniform/full) selection stream; also the
-            # in-flight top-up target and the default buffer size
+            # in-system top-up target and the default buffer size
             self._cohort = max(
                 1, int(np.asarray(self._default_mask(state)).sum()))
             self._buffer_k = sim.buffer_size or self._cohort
+            self._max_conc = sim.max_concurrency or math.inf
             self._version = 0          # server model version (aggregations)
-            self._serial = 0           # global upload serial
-            self._inflight: list = []  # heap of (t_arrival, serial, contrib)
+            self._serial = 0           # upload serial (codec dither stream)
+            self._eseq = 0             # event push sequence (heap tie-break)
+            self._events: list = []    # heap of (t, eseq, kind, payload)
+            self._stalled: collections.deque = collections.deque()
+            self._n_inflight = 0       # started clients awaiting arrival
+            self._n_queued_starts = 0  # start events sitting in the heap
+            self._cohort_live = np.zeros(cfg.m, bool)  # newest draw, live
 
         self._work = work_flops if work_flops is not None else \
             client_work_flops(alg, k0=cfg.k0,
@@ -446,73 +494,139 @@ class FedSim:
         self.round_idx += 1
         return m
 
-    # -- asynchronous buffered aggregation (policy="async") -----------------
+    # -- asynchronous client-level dispatch (policy="async") ----------------
 
-    def _dispatch_async(self) -> int:
-        """Broadcast to a fresh cohort at the current simulated time and
-        queue its uploads as future arrival events. Returns #queued.
+    def _free_slots(self) -> float:
+        return self._max_conc - self._n_inflight
 
-        The round function runs NOW (clients compute against the broadcast
-        they just received), which advances w_tau/k/key; the resulting W/Z
-        rows only reach the server's state when their arrival event is
-        merged. Causality note: the broadcast w_tau aggregates state.Z,
-        i.e. ONLY uploads already merged -- the cohort's own uploads live
-        in the discarded new_state.Z until their arrivals merge, so no
-        dispatch ever sees an in-flight upload. An all-offline cohort
-        leaves the state (and key) untouched, mirroring the sync policies'
-        abandoned rounds.
+    def _in_system(self) -> int:
+        """Clients the server currently owes work to: in flight, stalled on
+        a concurrency slot, or queued as unfired start events."""
+        return self._n_inflight + len(self._stalled) + self._n_queued_starts
+
+    def _select_cohort(self) -> int:
+        """Draw the next cohort from the algorithm's key stream and queue
+        one start event per LIVE member at the current simulated time.
+        Returns the live count.
+
+        Unreachable members cost their broadcast immediately (the contact
+        RPC fails; a wasted broadcast, like an abandoned sync round) and
+        never occupy a concurrency slot. The live mask is remembered as the
+        aggregation anchor the baselines' agg_mask hook receives.
         """
         candidates = np.asarray(self._candidates(self.state))
-        arrivals = simclients.round_arrivals(
+        durations = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
             up_bytes=self._up_bytes)
-        live = candidates & np.isfinite(arrivals)
-        self._ev_contacted += int(candidates.sum())
-        self._ev_down += candidates.astype(np.int64)
-        self._ev_dropped += int(candidates.sum() - live.sum())
-        if not live.any():
-            return 0
-        new_state, rmetrics = self._step(self.state, jnp.asarray(live))
+        live = candidates & np.isfinite(durations)
+        self._cohort_live = live
+        offline = candidates & ~live
+        self._ev_contacted += int(offline.sum())
+        self._ev_dropped += int(offline.sum())
+        self._ev_down += offline.astype(np.int64)
+        for i in np.flatnonzero(live):
+            heapq.heappush(self._events, (self.t, self._eseq, _EV_START,
+                                          (int(i), float(durations[i]))))
+            self._eseq += 1
+            self._n_queued_starts += 1
+        return int(live.sum())
+
+    def _fire_group(self, group: list[tuple[int, float]]) -> None:
+        """Broadcast to ``group`` NOW: run the round function once over its
+        members (clients compute against the broadcast they just received),
+        which advances w_tau/k/key; the resulting W/Z rows only reach the
+        server's state when their upload events are merged. Causality note:
+        the broadcast aggregates state.Z, i.e. ONLY uploads already merged
+        -- the group's own uploads live in the discarded new_state.Z until
+        their arrivals merge, so no dispatch ever sees an in-flight upload.
+        """
+        mask = np.zeros(self.cfg.m, bool)
+        mask[[i for i, _ in group]] = True
+        self._ev_contacted += len(group)
+        self._ev_down += mask.astype(np.int64)
+        if self._step_agg is not None:
+            # baselines: anchor eq. (34)'s mean on the whole live cohort so
+            # a capped sub-group dispatch still mixes across clients (the
+            # uncapped group IS the cohort, recovering sync exactly). The
+            # union with the group keeps the anchor non-empty even when a
+            # NEWER cohort draw came up all-offline while this group sat
+            # stalled (an empty mean would broadcast a zero vector).
+            new_state, rmetrics = self._step_agg(
+                self.state, jnp.asarray(mask),
+                jnp.asarray(self._cohort_live | mask))
+        else:
+            new_state, rmetrics = self._step(self.state, jnp.asarray(mask))
         self.state = self.state._replace(
             w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
         self.last_round_metrics = rmetrics
-        for i in np.flatnonzero(live):
-            i = int(i)
+        self._n_inflight += len(group)
+        for i, dur in group:
             c = _Contribution(
                 client=i, version=self._version, serial=self._serial,
                 z_row=tmap(lambda x: x[i:i + 1], new_state.Z),
                 w_row=tmap(lambda x: x[i:i + 1], new_state.W))
-            heapq.heappush(self._inflight,
-                           (self.t + float(arrivals[i]), c.serial, c))
+            heapq.heappush(self._events,
+                           (self.t + dur, self._eseq, _EV_UPLOAD, c))
+            self._eseq += 1
             self._serial += 1
-        return int(live.sum())
 
     def _step_async(self) -> SimMetrics:
-        """One aggregation event: pump arrivals until the buffer holds
-        ``buffer_size`` contributions, staleness-merge them in arrival
-        order, advance the server version, and top the in-flight pool back
-        up to one cohort."""
+        """One aggregation event: pump the per-client event queue until the
+        buffer holds ``buffer_size`` contributions, staleness-merge them in
+        arrival order, and advance the server version.
+
+        Event lifecycle: select (key-stream cohort draw) -> start (slot
+        permitting; same-instant starts batch into one round-function call)
+        -> upload (arrival frees a slot, which immediately un-stalls the
+        oldest waiting dispatch). Fresh cohorts are drawn at step entry
+        whenever the system holds less than one cohort of work, and
+        mid-fill whenever the queue runs dry -- both on the sync key
+        stream, which is what keeps max_concurrency >= cohort +
+        buffer == cohort bit-identical to sync.run(N).
+        """
         t_start = self.t
         self._ev_down = np.zeros(self.cfg.m, np.int64)
         self._ev_up = np.zeros(self.cfg.m, np.int64)
         self._ev_contacted = 0
         self._ev_dropped = 0
-        # top the in-flight pool up to one cohort of fresh work BEFORE
-        # pumping arrivals: leftover stragglers from earlier cohorts overlap
-        # the new dispatch. Topping up at step entry (not after the merge)
-        # keeps state-after-N-steps == N dispatches + N merges, which is
-        # what makes the buffer==cohort case bit-identical to sync.run(N).
-        if len(self._inflight) < self._cohort:
-            self._dispatch_async()
+        if self._in_system() < self._cohort:
+            self._select_cohort()
         buffer: list[_Contribution] = []
         dry = 0
         while len(buffer) < self._buffer_k and dry < _MAX_DRY_DISPATCHES:
-            if not self._inflight:
-                dry = dry + 1 if self._dispatch_async() == 0 else 0
+            # un-stall slot-blocked dispatches first: they have been waiting
+            # since an earlier instant and outrank anything queued later
+            if self._stalled and self._free_slots() >= 1:
+                group = [self._stalled.popleft()]
+                while self._stalled and len(group) < self._free_slots():
+                    group.append(self._stalled.popleft())
+                self._fire_group(group)
                 continue
-            t_ev, _, c = heapq.heappop(self._inflight)
+            if not self._events:
+                # nothing in flight and nothing startable: draw fresh work
+                dry = dry + 1 if self._select_cohort() == 0 else 0
+                continue
+            t_ev, _, kind, payload = heapq.heappop(self._events)
             self.t = max(self.t, t_ev)
+            if kind == _EV_START:
+                self._n_queued_starts -= 1
+                if self._free_slots() < 1:
+                    self._stalled.append(payload)
+                    continue
+                group = [payload]
+                # same-instant starts batch into ONE dispatch (one round
+                # function call, one key advance) while slots allow --
+                # an uncapped server therefore dispatches whole cohorts
+                while (self._events and len(group) < self._free_slots()
+                       and self._events[0][0] == t_ev
+                       and self._events[0][2] == _EV_START):
+                    group.append(heapq.heappop(self._events)[3])
+                    self._n_queued_starts -= 1
+                self._fire_group(group)
+                continue
+            c = payload
+            self._n_inflight -= 1
             self._ev_up[c.client] += 1
             buffer.append(c)
 

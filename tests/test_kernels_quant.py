@@ -1,10 +1,18 @@
 """Upload-codec quantizer + error-feedback accumulate: Pallas (interpret)
-vs jnp ref, grid/unbiasedness properties, and the transport codec
-round-trip built on top of them."""
+vs jnp ref, grid/unbiasedness properties, property-based (hypothesis)
+codec laws, and the transport codec round-trip built on top of them."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is optional: on a bare environment only the property-based
+# tests skip; the kernel validation still runs
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
 
 from repro.kernels.quant import ops, ref
 from repro.sim.transport import CodecConfig, codec_roundtrip, encoded_client_bytes
@@ -164,6 +172,109 @@ def test_ef_shape_validation():
     from repro.kernels.quant.ef import ef_accumulate_pallas
     with pytest.raises(ValueError, match="matching"):
         ef_accumulate_pallas(Z, H[:1], s, 8)
+
+
+# ---------------------------------------------------------------------------
+# property-based codec laws (hypothesis; optional as in the other kernels)
+# ---------------------------------------------------------------------------
+
+if hypothesis is not None:
+    _given_codec_case = hypothesis.given(case=st.tuples(
+        st.integers(1, 5),                       # m clients
+        st.integers(2, 96),                      # n coords
+        st.sampled_from([2, 4, 8]),              # wire bits
+        st.floats(0.1, 1.0),                     # topk fraction
+        st.integers(0, 2 ** 31 - 1),             # data seed
+    ))
+    _settings_codec = hypothesis.settings(deadline=None, max_examples=30)
+else:
+    _given_codec_case = pytest.mark.skip(reason="hypothesis not installed")
+    _settings_codec = lambda f: f  # noqa: E731
+
+
+def _rand_tree(m, n, seed, scale=3.0):
+    key = jax.random.PRNGKey(seed % (2 ** 31 - 1))
+    return {"w": jax.random.normal(key, (m, n)) * scale}
+
+
+@_settings_codec
+@_given_codec_case
+def test_prop_roundtrip_error_bound(case):
+    """|decode(encode(z)) - z| <= scale/levels on every KEPT coordinate,
+    for any shape/bits/sparsity; dropped coordinates take the fallback
+    exactly (here: z itself, isolating quantization error)."""
+    m, n, bits, frac, seed = case
+    t = _rand_tree(m, n, seed)
+    out = codec_roundtrip(t, t, jax.random.PRNGKey(seed % 997),
+                          CodecConfig(topk_frac=frac, bits=bits))
+    L = ref.quant_levels(bits)
+    z = np.asarray(t["w"], np.float64)
+    o = np.asarray(out["w"], np.float64)
+    k = n if frac >= 1.0 else max(1, int(np.ceil(frac * n)))
+    for i in range(m):
+        kept = np.argsort(-np.abs(z[i]))[:k]
+        delta = np.abs(z[i, kept]).max() / L
+        assert (np.abs(o[i, kept] - z[i, kept]) <= delta * (1 + 1e-5)).all()
+        dropped = np.setdiff1d(np.arange(n), kept)
+        np.testing.assert_array_equal(o[i, dropped], z[i, dropped])
+
+
+@_settings_codec
+@_given_codec_case
+def test_prop_ef_residual_never_grows(case):
+    """EF memory contraction, worst case: one deterministic-rounding EF
+    pass never increases the residual sup-norm ||z - h|| -- kept
+    coordinates land within half a grid step of their target, dropped
+    coordinates keep their old (smaller-magnitude) residual."""
+    from repro.sim.transport import ef_roundtrip
+
+    m, n, bits, frac, seed = case
+    z = _rand_tree(m, n, seed)
+    h = _rand_tree(m, n, seed + 1, scale=1.0)
+    codec = CodecConfig(topk_frac=frac, bits=bits, stochastic=False,
+                        error_feedback=True)
+    h_new = ef_roundtrip(z, h, jax.random.PRNGKey(0), codec)
+    r0 = np.abs(np.asarray(z["w"], np.float64)
+                - np.asarray(h["w"], np.float64)).max(axis=1)
+    r1 = np.abs(np.asarray(z["w"], np.float64)
+                - np.asarray(h_new["w"], np.float64)).max(axis=1)
+    assert (r1 <= r0 * (1 + 1e-6)).all()
+
+
+def test_prop_ef_residual_contracts_in_expectation():
+    """Stochastic rounding can grow a single residual; ITS EXPECTATION must
+    still contract: averaged over many dither draws, E||z - h'||^2 after
+    one dense 8-bit EF pass is far below ||z - h||^2."""
+    from repro.sim.transport import ef_roundtrip
+
+    z = _rand_tree(4, 64, seed=0)
+    h = _rand_tree(4, 64, seed=1, scale=1.0)
+    codec = CodecConfig(topk_frac=1.0, bits=8, error_feedback=True)
+    r0 = float(np.sum((np.asarray(z["w"]) - np.asarray(h["w"])) ** 2))
+    sq = []
+    for s in range(32):
+        h_new = ef_roundtrip(z, h, jax.random.PRNGKey(s), codec)
+        sq.append(float(np.sum(
+            (np.asarray(z["w"]) - np.asarray(h_new["w"])) ** 2)))
+    assert np.mean(sq) < 0.1 * r0
+
+
+@_settings_codec
+@_given_codec_case
+def test_prop_topk_sparsity_count_exact(case):
+    """The codec touches EXACTLY ceil(frac * n) coordinates per client per
+    leaf -- the count the byte ledger bills for. A sentinel fallback makes
+    touched coordinates identifiable."""
+    m, n, bits, frac, seed = case
+    t = _rand_tree(m, n, seed)          # |values| <= ~15, sentinel unreachable
+    sentinel = 1.0e9
+    fb = jax.tree_util.tree_map(lambda x: jnp.full_like(x, sentinel), t)
+    out = codec_roundtrip(t, fb, jax.random.PRNGKey(seed % 997),
+                          CodecConfig(topk_frac=frac, bits=bits))
+    k = n if frac >= 1.0 else max(1, int(np.ceil(frac * n)))
+    o = np.asarray(out["w"])
+    touched = (o != sentinel).sum(axis=1)
+    np.testing.assert_array_equal(touched, np.full(m, k))
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,16 @@
-"""Async buffered aggregation, staleness weighting, adaptive deadlines,
-and codec error feedback (repro.sim beyond-paper policies)."""
+"""Async client-level dispatch engine, staleness weighting, adaptive
+deadlines, trace-driven device profiles, and codec error feedback
+(repro.sim beyond-paper policies)."""
+import json
 import math
+import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fedepm, participation
+from repro.core import baselines, fedepm, participation
 from repro.core.tasks import make_logistic_loss
 from repro.data import synth
 from repro.data.partition import partition_iid
@@ -15,6 +18,7 @@ from repro.sim import (
     AdaptiveDeadlines,
     CodecConfig,
     FedSim,
+    LatencyTrace,
     SimConfig,
     ef_roundtrip,
     make_profiles,
@@ -24,6 +28,8 @@ from repro.sim import (
 
 M = 16
 N = 14
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+TRACE_CSV = FIXTURES / "device_trace.csv"
 
 
 @pytest.fixture(scope="module")
@@ -306,6 +312,234 @@ def test_ef_works_in_async_mode(task):
     assert not _tree_equal(sim._H, h0)
     # compressed uploads billed at the encoded size
     assert 0 < sim.ledger.total_up < 10 * 4 * N * 4
+
+
+# ---------------------------------------------------------------------------
+# client-level dispatch: concurrency caps, per-client scheduling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap", [8, 16, 0])  # cohort = rho*m = 8; 0 = inf
+def test_async_concurrency_at_least_cohort_is_sync_bitforbit(task, cap):
+    """Acceptance criterion: max_concurrency >= cohort + buffer = cohort
+    reproduces the synchronous trajectory bit-for-bit -- key, clock, and
+    every state leaf."""
+    batches, loss = task
+    cfg = _cfg(eps_dp=0.1, sensitivity_clip=1.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    step = jax.jit(lambda s: fedepm.fedepm_round(s, batches, loss, cfg))
+    sref = s0
+    for _ in range(5):
+        sref, _ = step(sref)
+
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss,
+                 sim=SimConfig(policy="async", max_concurrency=cap))
+    sync = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                  loss_fn=loss, sim=SimConfig(policy="sync"))
+    sim.run(5)
+    sync.run(5)
+    for leaf_sim, leaf_ref in zip(jax.tree_util.tree_leaves(sim.state),
+                                  jax.tree_util.tree_leaves(sref)):
+        assert np.array_equal(np.asarray(leaf_sim), np.asarray(leaf_ref))
+    assert sim.t == sync.t  # the event clock too, exactly
+
+
+def test_async_baseline_buffer_cohort_is_sync_bitforbit(task):
+    """The baselines run under the same client-level engine: at buffer =
+    cohort the async trajectory (incl. key) is bit-for-bit the sync one --
+    the agg_mask anchor degenerates to eq. (34)'s selected mean."""
+    batches, loss = task
+    for alg, rnd in (("sfedavg", baselines.sfedavg_round),
+                     ("sfedprox", baselines.sfedprox_round)):
+        cfg = baselines.BaselineConfig(m=M, k0=4, rho=0.5, eps_dp=0.0)
+        s0 = baselines.init_state(jax.random.PRNGKey(1), jnp.zeros(N), cfg)
+        step = jax.jit(lambda s, rnd=rnd, cfg=cfg: rnd(s, batches, loss, cfg))
+        sref = s0
+        for _ in range(4):
+            sref, _ = step(sref)
+        sim = FedSim(alg=alg, cfg=cfg, state=s0, batches=batches,
+                     loss_fn=loss, sim=SimConfig(policy="async"))
+        sim.run(4)
+        for a, b in zip(jax.tree_util.tree_leaves(sim.state),
+                        jax.tree_util.tree_leaves(sref)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), alg
+
+
+def test_async_concurrency_cap_is_respected_and_differs(task):
+    """cap < cohort: never more than `cap` clients in flight, dispatches
+    trickle (round-function calls outnumber cohort draws), staleness
+    appears, the objective still descends, and the trajectory differs from
+    the uncapped one (later clients see fresher broadcasts)."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    def build(cap):
+        return FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                      loss_fn=loss, profiles=make_profiles(M, seed=3),
+                      sim=SimConfig(policy="async", buffer_size=4,
+                                    max_concurrency=cap, latency="pareto",
+                                    latency_alpha=1.1, seed=7))
+
+    capped = build(3)
+    max_seen = 0
+    for _ in range(10):
+        capped.step()
+        assert capped._n_inflight <= 3
+        max_seen = max(max_seen, capped._n_inflight)
+    assert max_seen > 0
+    assert capped._version == 10
+    assert max(m.staleness_max for m in capped.metrics) >= 1
+    f = float(fedepm.global_objective(loss, capped.state.w_tau, batches)) / M
+    assert f < math.log(2.0)
+
+    uncapped = build(0)
+    uncapped.run(10)
+    assert not _tree_equal(capped.state.w_tau, uncapped.state.w_tau)
+
+
+def test_async_capped_run_is_deterministic(task):
+    """Two sims with identical SimConfig produce identical trajectories,
+    clocks and ledgers (the event engine has no hidden entropy)."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+
+    def run():
+        sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                     loss_fn=loss, profiles=make_profiles(M, seed=4),
+                     sim=SimConfig(policy="async", buffer_size=3,
+                                   max_concurrency=2, latency="lognormal",
+                                   seed=11))
+        sim.run(8)
+        return sim
+
+    a, b = run(), run()
+    assert _tree_equal(a.state, b.state)
+    assert a.t == b.t
+    assert np.array_equal(a.ledger.up, b.ledger.up)
+    assert np.array_equal(a.ledger.down, b.ledger.down)
+    assert [m.t_round for m in a.metrics] == [m.t_round for m in b.metrics]
+
+
+def test_async_rejects_bad_concurrency(task):
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    with pytest.raises(ValueError, match="max_concurrency"):
+        FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+               loss_fn=loss,
+               sim=SimConfig(policy="async", max_concurrency=-1))
+
+
+def test_baseline_agg_mask_hook(task):
+    """Core-level contract of the async anchor: agg_mask defaults to the
+    participation mask (eq. (34) unchanged) and a wider anchor changes only
+    the broadcast point, not who uploads."""
+    batches, loss = task
+    cfg = baselines.BaselineConfig(m=M, k0=2, rho=0.5, eps_dp=0.0)
+    s0 = baselines.init_state(jax.random.PRNGKey(2), jnp.zeros(N), cfg)
+    # advance past init (where all Z rows coincide and every mean is equal)
+    for _ in range(2):
+        s0, _ = baselines.sfedavg_round(s0, batches, loss, cfg)
+    mask = baselines.default_round_mask(s0, cfg)
+    s_def, _ = baselines.sfedavg_round(s0, batches, loss, cfg, mask=mask)
+    s_same, _ = baselines.sfedavg_round(s0, batches, loss, cfg, mask=mask,
+                                        agg_mask=mask)
+    assert _tree_equal(s_def, s_same)
+    wide = jnp.ones((M,), bool)
+    s_wide, met = baselines.sfedavg_round(s0, batches, loss, cfg, mask=mask,
+                                          agg_mask=wide)
+    assert not _tree_equal(s_def.w_tau, s_wide.w_tau)
+    assert np.array_equal(np.asarray(met.selected), np.asarray(mask))
+    # non-participants carry state through either way (eq. (22))
+    W_wide = np.asarray(jax.tree_util.tree_leaves(s_wide.W)[0])
+    W_0 = np.asarray(jax.tree_util.tree_leaves(s0.W)[0])
+    sel = np.asarray(mask)
+    assert np.array_equal(W_wide[~sel], W_0[~sel])
+
+
+# ---------------------------------------------------------------------------
+# trace-driven device profiles
+# ---------------------------------------------------------------------------
+
+def test_trace_loads_csv_fixture():
+    tr = LatencyTrace.from_csv(TRACE_CSV)
+    assert tr.n_entries == 18
+    assert "pixel-6a" in tr.device
+    assert (tr.speed > 0).all() and (tr.availability <= 1.0).all()
+    # load() dispatches on extension
+    tr2 = LatencyTrace.load(str(TRACE_CSV))
+    assert tr2.device == tr.device
+
+
+def test_trace_loads_json(tmp_path):
+    rows = [{"device": "a", "speed": 1.0, "bw_up": 1e6, "bw_down": 1e7},
+            {"device": "b", "speed": 0.5, "bw_up": 5e5, "bw_down": 5e6,
+             "availability": 0.8}]
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps({"entries": rows}))
+    tr = LatencyTrace.load(str(p))
+    assert tr.n_entries == 2
+    assert tr.availability[0] == 1.0          # optional field defaults
+    assert tr.availability[1] == 0.8
+    p2 = tmp_path / "bare.json"
+    p2.write_text(json.dumps(rows))           # bare-list form
+    assert LatencyTrace.from_json(p2).n_entries == 2
+
+
+def test_trace_validation(tmp_path):
+    with pytest.raises(ValueError, match="empty"):
+        LatencyTrace.from_rows([])
+    with pytest.raises(ValueError, match="missing required"):
+        LatencyTrace.from_rows([{"device": "x", "speed": 1.0}])
+    with pytest.raises(ValueError, match="finite"):
+        LatencyTrace.from_rows([{"speed": -1.0, "bw_up": 1e6,
+                                 "bw_down": 1e6}])
+    with pytest.raises(ValueError, match="availability"):
+        LatencyTrace.from_rows([{"speed": 1.0, "bw_up": 1e6, "bw_down": 1e6,
+                                 "availability": 1.5}])
+    with pytest.raises(ValueError, match="unknown trace format"):
+        LatencyTrace.load(str(tmp_path / "trace.txt"))
+
+
+def test_trace_resampling_assignment():
+    tr = LatencyTrace.from_csv(TRACE_CSV)
+    # fleet within the trace: distinct device per client, deterministic
+    idx = tr.assign(10, seed=0)
+    assert len(set(idx.tolist())) == 10
+    assert np.array_equal(idx, tr.assign(10, seed=0))
+    assert not np.array_equal(idx, tr.assign(10, seed=1))
+    # fleet larger than the trace: bootstrap
+    big = tr.assign(100, seed=0)
+    assert len(big) == 100 and big.max() < tr.n_entries
+    with pytest.raises(ValueError, match="without replacement"):
+        tr.assign(100, seed=0, replace=False)
+    prof = tr.sample_profiles(12, seed=3)
+    assert prof.m == 12
+    # each client's profile is literally a trace row
+    for j in range(12):
+        row = np.flatnonzero(np.isclose(tr.speed, prof.speed[j]))
+        assert row.size >= 1
+
+
+def test_trace_profiles_drive_async_sim(task):
+    """End-to-end: a trace-resampled fleet under client-level async
+    dispatch descends and produces heterogeneous arrival times."""
+    batches, loss = task
+    cfg = _cfg()
+    s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    prof = LatencyTrace.from_csv(TRACE_CSV).sample_profiles(M, seed=0)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=prof,
+                 sim=SimConfig(policy="async", buffer_size=4,
+                               max_concurrency=6, seed=2))
+    sim.run(8)
+    f = float(fedepm.global_objective(loss, sim.state.w_tau, batches)) / M
+    assert f < math.log(2.0)
+    durs = [m.t_round for m in sim.metrics if not m.abandoned]
+    assert len(set(durs)) > 1  # heterogeneous fleet: event gaps vary
 
 
 def test_async_uniform_fleet_event_times(task):

@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Regenerate tests/fixtures/golden_sync_trajectory.npz.
+
+The fixture pins 2 rounds of the SYNC simulation (deterministic latency,
+heterogeneous profiles, DP noise ON) on the reduced paper logreg task:
+per-round global objective, cumulative simulated clock, the first 8
+coordinates of the broadcast point w_tau, and the final PRNG key /
+iteration counter. tests/test_sim_invariants.py diffs every future server
+refactor against this stored trajectory, so regressions show up even when
+a refactor stays self-consistent.
+
+ONLY regenerate after a DELIBERATE semantic change to the round math or
+the sim's timing model, and say why in the commit:
+
+    PYTHONPATH=src python tools/regen_golden_trajectory.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedepm
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.sim import FedSim, SimConfig, make_profiles
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT = ROOT / "tests" / "fixtures" / "golden_sync_trajectory.npz"
+
+# frozen scenario -- changing ANY of these invalidates the fixture
+M = 16
+N = 14
+D = 2000
+ROUNDS = 2
+SEED = 0
+PROFILE_SEED = 5
+HEAD = 8  # leading w_tau coordinates pinned
+
+
+def simulate_golden() -> dict[str, np.ndarray]:
+    """Run the frozen scenario and return the trajectory arrays."""
+    X, y = synth.adult_like(d=D, n=N, seed=SEED)
+    batches = jax.tree_util.tree_map(
+        jnp.asarray, partition_iid(X, y, m=M, seed=SEED))
+    loss = make_logistic_loss()
+    cfg = fedepm.FedEPMConfig.paper_defaults(
+        m=M, rho=0.5, k0=4, eps_dp=0.1, sensitivity_clip=1.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(SEED), jnp.zeros(N), cfg)
+    sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
+                 loss_fn=loss, profiles=make_profiles(M, seed=PROFILE_SEED),
+                 sim=SimConfig(policy="sync", seed=SEED))
+    objective, t_total, w_head = [], [], []
+    for _ in range(ROUNDS):
+        m = sim.step()
+        objective.append(
+            float(fedepm.global_objective(loss, sim.state.w_tau, batches)))
+        t_total.append(m.t_total)
+        w_head.append(np.asarray(sim.state.w_tau)[:HEAD].copy())
+    return {
+        "objective": np.asarray(objective, np.float64),
+        "t_total": np.asarray(t_total, np.float64),
+        "w_tau_head": np.stack(w_head),
+        "key_final": np.asarray(sim.state.key),
+        "k_final": np.asarray(int(sim.state.k)),
+    }
+
+
+def main() -> int:
+    arrays = simulate_golden()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(OUT, **arrays)
+    print(f"wrote {OUT.relative_to(ROOT)}")
+    for k, v in arrays.items():
+        print(f"  {k:12s} shape={np.shape(v)} "
+              f"{np.asarray(v).ravel()[:4]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
