@@ -1,0 +1,197 @@
+"""Engine benchmark: eager per-round dispatch vs the fused scan engine.
+
+Measures, on the paper logreg task (sync policy, CPU unless the host has an
+accelerator):
+
+  * rounds/sec of the eager driver (one jit dispatch + host round-trip per
+    round) vs ``repro.sim.engine.run_rounds`` (K rounds in one donated
+    ``lax.scan``), post-compile;
+  * wall-clock to a fixed objective: the objective the eager sync run ends
+    at after the round budget, then each engine races a fresh sim to it
+    (the trajectories are bit-identical, so both need the same number of
+    rounds -- the gap is pure dispatch overhead);
+  * host-sync counts (device->host transfers) per engine, the quantity the
+    scan engine exists to remove: eager pays ~2/round, scan ~2/chunk.
+
+Emits CSV rows for benchmarks/run.py and --json writes BENCH_engine.json:
+
+  {"config": {...},
+   "engines": {"eager": {"rounds_per_sec", "wall_to_target_s",
+                         "rounds_to_target", "host_syncs",
+                         "host_syncs_per_round"},
+               "scan": {...}},
+   "speedup_rounds_per_sec": ..., "speedup_wall_to_target": ...,
+   "target_objective": ...}
+
+The speedup is dispatch-bound: on the reduced task (--quick / default) the
+round math is microseconds and scan wins by the dispatch factor; at the
+paper's full d=45222 (--full) rounds are compute-bound and the gap narrows
+toward 1 -- both regimes are the point (docs/perf.md).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedepm
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.sim import FedSim, SimConfig, run_rounds, run_to_objective
+
+QUICK_KW = dict(d=2000, m=16, k0=4, rounds=120, repeats=3)
+
+
+def _build(cfg, state, batches, loss, seed):
+    return FedSim(alg="fedepm", cfg=cfg, state=state, batches=batches,
+                  loss_fn=loss, sim=SimConfig(policy="sync", seed=seed))
+
+
+def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
+          n: int = 14, rounds: int = 60, repeats: int = 3,
+          seed: int = 0) -> dict:
+    X, y = synth.adult_like(d=d, n=n, seed=seed)
+    batches = jax.tree_util.tree_map(
+        jnp.asarray, partition_iid(X, y, m=m, seed=seed))
+    loss = make_logistic_loss()
+    fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
+    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0, eps_dp=0.0)
+    state = fedepm.init_state(jax.random.PRNGKey(seed), jnp.zeros(n), cfg)
+    mk = lambda: _build(cfg, state, batches, loss, seed)  # noqa: E731
+
+    # -- warmup: compile both engines' programs outside the timed region --
+    # batched per-chunk objective for the scan race: same loss/batches,
+    # vmapped over the chunk's stacked broadcast points (can differ from
+    # the scalar fobj by 1 ulp at the target boundary -- the smoke test
+    # allows +-1 round)
+    fobj_chunk = jax.jit(lambda W: jax.vmap(
+        lambda wt: fedepm.global_objective(loss, wt, batches))(W) / m)
+
+    w = mk()
+    w.run(2)
+    float(fobj(w.state.w_tau))
+    run_rounds(mk(), rounds)                      # chunk of `rounds`
+    s = mk()
+    res = run_rounds(s, min(16, rounds), collect_w_tau=True)  # race chunks
+    np.asarray(fobj_chunk(jnp.asarray(res.w_tau)))
+
+    # -- rounds/sec, median over repeats ----------------------------------
+    def timed_eager():
+        sim = mk()
+        sim.host_syncs = 0
+        t0 = time.perf_counter()
+        sim.run(rounds)
+        jax.block_until_ready(sim.state.w_tau)
+        return time.perf_counter() - t0, sim.host_syncs
+
+    def timed_scan():
+        sim = mk()
+        sim.host_syncs = 0
+        t0 = time.perf_counter()
+        run_rounds(sim, rounds)
+        jax.block_until_ready(sim.state.w_tau)
+        return time.perf_counter() - t0, sim.host_syncs
+
+    eager_t, eager_syncs = zip(*(timed_eager() for _ in range(repeats)))
+    scan_t, scan_syncs = zip(*(timed_scan() for _ in range(repeats)))
+    eager_rps = rounds / statistics.median(eager_t)
+    scan_rps = rounds / statistics.median(scan_t)
+
+    # -- wall-clock to a fixed objective ----------------------------------
+    # target: where the sync trajectory lands after the budget. Both
+    # engines run the SAME trajectory bit-for-bit, so they hit it after
+    # the same number of rounds; the wall-clock gap is dispatch overhead.
+    ref = mk()
+    ref.run(rounds)
+    target = float(fobj(ref.state.w_tau)) / m
+
+    sim = mk()
+    t0 = time.perf_counter()
+    er = 0
+    f = float("inf")
+    while f > target and er < 2 * rounds:
+        sim.step()
+        er += 1
+        f = float(fobj(sim.state.w_tau)) / m
+    eager_wall = time.perf_counter() - t0
+
+    sim = mk()
+    t0 = time.perf_counter()
+    sr, hit, _ = run_to_objective(sim, fobj_chunk, target,
+                                  max_rounds=2 * rounds, chunk=16)
+    scan_wall = time.perf_counter() - t0
+    assert hit and f <= target, "both engines must reach the target"
+
+    def eng(rps, wall, rtt, syncs):
+        return {"rounds_per_sec": rps, "wall_to_target_s": wall,
+                "rounds_to_target": rtt,
+                "host_syncs": int(statistics.median(syncs)),
+                "host_syncs_per_round":
+                    statistics.median(syncs) / rounds}
+
+    return {
+        "config": {"task": "paper_logreg", "policy": "sync", "d": d, "m": m,
+                   "k0": k0, "rho": rho, "n": n, "rounds": rounds,
+                   "repeats": repeats, "seed": seed,
+                   "backend": jax.default_backend()},
+        "engines": {"eager": eng(eager_rps, eager_wall, er, eager_syncs),
+                    "scan": eng(scan_rps, scan_wall, sr, scan_syncs)},
+        "speedup_rounds_per_sec": scan_rps / eager_rps,
+        "speedup_wall_to_target": eager_wall / scan_wall,
+        "target_objective": target,
+    }
+
+
+def rows_from(summary: dict) -> list:
+    rows = []
+    for name, e in summary["engines"].items():
+        rows.append((f"engine/{name}/rounds_per_sec", e["rounds_per_sec"],
+                     f"host_syncs_per_round={e['host_syncs_per_round']:.3f}"))
+        rows.append((f"engine/{name}/wall_to_target_s",
+                     e["wall_to_target_s"],
+                     f"rounds_to_target={e['rounds_to_target']};"
+                     f"f_target={summary['target_objective']:.6f}"))
+    rows.append(("engine/speedup_rounds_per_sec",
+                 summary["speedup_rounds_per_sec"],
+                 f"backend={summary['config']['backend']};"
+                 f"d={summary['config']['d']};m={summary['config']['m']}"))
+    rows.append(("engine/speedup_wall_to_target",
+                 summary["speedup_wall_to_target"], ""))
+    return rows
+
+
+def run(**kw) -> list:
+    """benchmarks/run.py entry point: CSV rows."""
+    return rows_from(bench(**kw))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Fused scan engine vs eager dispatch benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced task, short budget (CI smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="the paper's full d=45222 task (compute-bound)")
+    ap.add_argument("--json", default=None,
+                    help="write the summary dict (BENCH_engine.json schema) "
+                         "to this path")
+    args = ap.parse_args(argv)
+    kw = QUICK_KW if args.quick else (dict(d=45222) if args.full else {})
+    summary = bench(**kw)
+    for r in rows_from(summary):
+        print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

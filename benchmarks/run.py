@@ -22,9 +22,9 @@ def main(argv=None):
                     help="comma-separated module names (fig2,fig3,...)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (ens_kernel, fig2_accuracy, fig3_k0, fig4_rho,
-                            fig5_privacy, fig6_stragglers, fig7_async,
-                            table1_lct)
+    from benchmarks import (bench_engine, ens_kernel, fig2_accuracy, fig3_k0,
+                            fig4_rho, fig5_privacy, fig6_stragglers,
+                            fig7_async, table1_lct)
 
     d = 4000 if args.quick else 45222
     trials = 1 if args.quick else (3 if not args.full else 10)
@@ -51,6 +51,9 @@ def main(argv=None):
         "fig7": lambda: fig7_async.run(
             **(fig7_async.QUICK_KW if args.quick
                else dict(d=d, m=32, rounds=60))),
+        "engine": lambda: bench_engine.run(
+            **(bench_engine.QUICK_KW if args.quick
+               else dict(d=d, m=50, rounds=60))),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -202,3 +202,36 @@ def sfedprox_round(state: BaselineState, batches: Batch, loss_fn: LossFn,
                               k=state.k + jnp.asarray(cfg.k0, jnp.int32),
                               key=key)
     return new_state, BaselineMetrics(snr=snr, selected=mask, grad_l1=grad_l1)
+
+
+def scan_round(state: BaselineState, xs, batches: Batch, loss_fn: LossFn,
+               cfg: BaselineConfig, round_fn):
+    """Scan-compatible round body: ``(carry=state, x=(mask, abandoned))``.
+
+    ``round_fn`` is ``sfedavg_round`` or ``sfedprox_round``. Semantics
+    match ``core.fedepm.scan_round``: an abandoned round carries the state
+    (and key) through untouched; metrics are emitted shape-stably and must
+    be ignored for abandoned rounds. The fused engine (repro.sim.engine)
+    scans this body directly in its codec-free path.
+    """
+    mask, abandoned = xs
+    new_state, metrics = round_fn(state, batches, loss_fn, cfg, mask=mask)
+    return tree_where(abandoned, state, new_state), metrics
+
+
+def make_scan_rounds(batches, loss_fn, cfg, round_fn, *, donate: bool = True):
+    """Compile K baseline rounds into ONE on-device ``jax.lax.scan``.
+
+    ``round_fn`` is ``sfedavg_round`` or ``sfedprox_round``. Semantics match
+    ``core.fedepm.make_scan_rounds``: ``run(state, masks, abandoned)`` scans
+    a precomputed (K, m) participation-mask stream, abandoned rounds carry
+    the state (and key) through untouched, per-round metrics stack
+    on-device, and with ``donate`` the input state's buffers are reused for
+    the output instead of copied.
+    """
+    def run(state, masks, abandoned):
+        return jax.lax.scan(
+            lambda c, x: scan_round(c, x, batches, loss_fn, cfg, round_fn),
+            state, (masks, abandoned))
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())

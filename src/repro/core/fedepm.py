@@ -35,6 +35,7 @@ from repro.core.treeutil import (
     tmap,
     tree_broadcast_clients,
     tree_sq_norm,
+    tree_where,
     tree_where_client,
 )
 from repro.kernels.ens import ops as ens_ops
@@ -202,6 +203,43 @@ def fedepm_round(state: FedEPMState, batches: Batch, loss_fn: LossFn,
     metrics = RoundMetrics(mu_last=mu_last, grad_l1=grad_l1, snr=snr,
                            drift=drift, selected=mask, noise_scale=scale)
     return new_state, metrics
+
+
+def scan_round(state: FedEPMState, xs, batches: Batch, loss_fn: LossFn,
+               cfg: FedEPMConfig):
+    """Scan-compatible round body: ``(carry=state, x=(mask, abandoned))``.
+
+    One step of ``jax.lax.scan`` over a precomputed participation-mask
+    stream (repro.sim.engine). ``abandoned`` is a scalar bool: an abandoned
+    round (every contacted client offline) leaves the carried state --
+    including the PRNG key -- untouched, exactly like the eager simulation
+    path that never calls the round function. Metrics are still emitted
+    (shape-stable for stacking) and must be ignored by the caller for
+    abandoned rounds.
+    """
+    mask, abandoned = xs
+    new_state, metrics = fedepm_round(state, batches, loss_fn, cfg,
+                                      mask=mask)
+    return tree_where(abandoned, state, new_state), metrics
+
+
+def make_scan_rounds(batches: Batch, loss_fn: LossFn, cfg: FedEPMConfig,
+                     *, donate: bool = True):
+    """Compile K rounds into ONE on-device ``jax.lax.scan``.
+
+    Returns ``run(state, masks, abandoned) -> (state, stacked RoundMetrics)``
+    with ``masks`` (K, m) bool and ``abandoned`` (K,) bool. With ``donate``
+    the input state's buffers are donated to the XLA call and reused for the
+    output state instead of being copied -- the caller must not touch the
+    passed-in state afterwards. Per-round metrics are stacked on-device and
+    transferred once, not round by round.
+    """
+    def run(state, masks, abandoned):
+        return jax.lax.scan(
+            lambda c, x: scan_round(c, x, batches, loss_fn, cfg),
+            state, (masks, abandoned))
+
+    return jax.jit(run, donate_argnums=(0,) if donate else ())
 
 
 def global_objective(loss_fn: LossFn, w: Params, batches: Batch) -> jax.Array:

@@ -7,6 +7,10 @@ Two ops, each a (Pallas kernel, bit-identical jnp reference) pair:
 ``ef_accumulate`` -- fused error-feedback step H + Q(Z - H): compress the
                      residual against the shared codec memory and accumulate
                      the decoded value back into it (EF21-style).
+``quantize_cols`` -- batched multi-leaf codec step: quantize each row's
+                     leading kcols[i] live columns, pass the fallback
+                     through elsewhere (the padded 2-D layout the fused
+                     transport codec uses for whole-pytree encodes).
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ from typing import Literal
 import jax
 
 from repro.kernels.quant import ref as _ref
+from repro.kernels.quant.batch import quantize_cols_pallas
 from repro.kernels.quant.ef import ef_accumulate_pallas
 from repro.kernels.quant.quant import quantize_pallas
 
@@ -63,4 +68,28 @@ def ef_accumulate(Z: jax.Array, H: jax.Array, scale: jax.Array, bits: int,
                                     interpret=interpret)
     if impl == "ref":
         return _ef_ref_jit(Z, H, scale, bits, u32)
+    raise ValueError(f"unknown quant impl {impl!r}")
+
+
+def quantize_cols(X: jax.Array, F: jax.Array, scale: jax.Array,
+                  kcols: jax.Array, bits: int, u32: jax.Array | None = None,
+                  *, impl: Impl = "ref", block_n: int = 512,
+                  interpret: bool | None = None) -> jax.Array:
+    """Batched column-bounded quantize-dequantize with fallback.
+
+    X, F: (m, n) values and fallback; scale: (m,) per-row magnitude bound;
+    kcols: (m,) live-column counts (columns j < kcols[i] quantize, the rest
+    return F[i, j] bit-untouched); bits: wire bits per coordinate (>= 2);
+    u32: optional (m, n) uint32 dither -- present => unbiased stochastic
+    rounding. One launch encodes a whole pytree's (leaf, client) rows.
+    """
+    if X.ndim != 2 or X.shape != F.shape:
+        raise ValueError(
+            f"quantize_cols expects matching (m, n); got {X.shape} "
+            f"vs {F.shape}")
+    if impl == "pallas":
+        return quantize_cols_pallas(X, F, scale, kcols, bits, u32,
+                                    block_n=block_n, interpret=interpret)
+    if impl == "ref":
+        return _ref.quantize_cols_ref(X, F, scale, kcols, bits, u32)
     raise ValueError(f"unknown quant impl {impl!r}")

@@ -62,6 +62,41 @@ def quantize_ref(X: jax.Array, scale: jax.Array, bits: int,
     return out.astype(X.dtype)
 
 
+def quantize_cols_ref(X: jax.Array, F: jax.Array, scale: jax.Array,
+                      kcols: jax.Array, bits: int,
+                      u32: jax.Array | None = None) -> jax.Array:
+    """Column-bounded quantize-dequantize with fallback substitution.
+
+    The batched upload codec lays every (leaf, client) pair out as one row
+    of a padded 2-D array (repro.sim.transport); rows then differ in how
+    many leading columns are LIVE -- kept top-k values for a sparse leaf,
+    real (un-padded) coordinates for a dense one. Per row i:
+
+        out[i, j] = quantize(X[i, j])   if j <  kcols[i]
+                    F[i, j]             otherwise
+
+    i.e. live columns snap to the ``bits``-bit grid of ``scale[i]`` exactly
+    as ``quantize_ref`` does, dead columns pass the fallback F through
+    bit-untouched (the server's stale copy for a memoryless codec, zeros
+    for the EF residual path, the raw input for plain padding). X, F:
+    (m, n); scale: (m,); kcols: (m,) int32; u32: (m, n) dither or None.
+    """
+    L = quant_levels(bits)
+    x = X.astype(jnp.float32)
+    s = scale.astype(jnp.float32).reshape(-1, 1)
+    delta = s * (1.0 / L)  # mul-by-reciprocal: see the note on quantize_ref
+    safe = jnp.where(delta > 0, delta, 1.0)
+    if u32 is None:
+        u = 0.5
+    else:
+        u = u32.astype(jnp.float32) * _INV_2_32
+    q = jnp.floor(x / safe + u)
+    q = jnp.clip(q, -L, L)
+    dq = jnp.where(delta > 0, q * safe, 0.0).astype(X.dtype)
+    col = jnp.arange(X.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(col < kcols.reshape(-1, 1).astype(jnp.int32), dq, F)
+
+
 def ef_accumulate_ref(Z: jax.Array, H: jax.Array, scale: jax.Array, bits: int,
                       u32: jax.Array | None = None) -> jax.Array:
     """Error-feedback accumulate/compress step: H + Q_bits(Z - H), row-wise.

@@ -31,6 +31,15 @@ event; all three algorithms run under identical async semantics).
 ``--policy`` is accepted as an alias of ``--aggregation``. Device fleets
 come from --trace-file (resampled real logs) or the synthetic lognormal
 profiles. Full semantics: docs/sim.md.
+
+``--engine scan`` runs the clocked policies through the fused on-device
+round engine (repro.sim.engine): K rounds compile into one ``lax.scan``
+with donated state buffers and the participation-mask stream precomputed,
+reproducing the eager trajectory bit-for-bit at a fraction of the host
+dispatch overhead (docs/perf.md, benchmarks/bench_engine.py):
+
+  python -m repro.launch.simulate --alg fedepm --aggregation sync \
+      --engine scan --m 50 --rounds 200
 """
 from __future__ import annotations
 
@@ -54,6 +63,7 @@ from repro.sim import (
     LatencyTrace,
     SimConfig,
     make_profiles,
+    run_rounds,
 )
 
 
@@ -110,32 +120,56 @@ def run(args) -> dict:
 
     f_hist: list[float] = []
     rounds_run = 0
-    for r in range(args.rounds):
-        m = sim.step()
-        rounds_run += 1
-        f_hist.append(float(fobj(sim.state.w_tau)))
+
+    def report(m, f):
         if not args.quiet:
-            print(f"round {m.round_idx:3d}  f/m={f_hist[-1] / args.m:.6f}  "
+            print(f"round {m.round_idx:3d}  f/m={f / args.m:.6f}  "
                   f"t={m.t_total:9.4f}s (+{m.t_round:.4f})  "
                   f"agg={m.n_aggregated}/{m.n_contacted} "
                   f"drop={m.n_dropped}  "
                   f"up={m.bytes_up/1e3:.1f}kB down={m.bytes_down/1e3:.1f}kB"
                   + ("  ABANDONED" if m.abandoned else ""), flush=True)
+
+    def terminated() -> bool:
         # the paper's variance criterion fires spuriously on a flat start
         # (abandoned rounds leave f_hist at f(w0)): require history AND at
         # least one aggregated round before trusting it -- an all-abandoned
         # run reaches the round cap and shows abandoned_rounds == rounds
         progressed = any(not mm.abandoned for mm in sim.metrics)
-        if args.terminate and progressed and len(f_hist) >= 8 \
+        return (args.terminate and progressed and len(f_hist) >= 8
                 and termination_reached(
-                    f_hist, float(gsq(sim.state.w_tau)), aux["n"]):
-            break
+                    f_hist, float(gsq(sim.state.w_tau)), aux["n"]))
+
+    if args.engine == "scan":
+        # fused scan engine: rounds execute in compiled on-device chunks
+        # (bit-identical trajectory; async falls back to the event path
+        # inside run_rounds). Termination is checked at chunk granularity
+        # -- per-round under --terminate via chunk=1-sized budget of 8.
+        chunk = 8 if args.terminate else args.rounds
+        while rounds_run < args.rounds:
+            todo = min(chunk, args.rounds - rounds_run)
+            res = run_rounds(sim, todo, collect_w_tau=True)
+            for m, w in zip(res.metrics, res.w_tau):
+                f_hist.append(float(fobj(jnp.asarray(w))))
+                report(m, f_hist[-1])
+            rounds_run += todo
+            if terminated():
+                break
+    else:
+        for r in range(args.rounds):
+            m = sim.step()
+            rounds_run += 1
+            f_hist.append(float(fobj(sim.state.w_tau)))
+            report(m, f_hist[-1])
+            if terminated():
+                break
 
     acc = float(accuracy_logistic(sim.state.w_tau, jnp.asarray(aux["X"]),
                                   jnp.asarray(aux["y"])))
     dropped = sum(m.n_dropped for m in sim.metrics)
     summary = {
-        "alg": args.alg, "policy": args.aggregation, "latency": args.latency,
+        "alg": args.alg, "policy": args.aggregation, "engine": args.engine,
+        "latency": args.latency,
         "rounds": rounds_run, "f_final": f_hist[-1] / args.m,
         "accuracy": acc, "sim_time_s": sim.t,
         "stragglers_dropped": dropped,
@@ -167,6 +201,15 @@ def main(argv=None):
                     choices=["sync", "deadline", "adaptive", "overselect",
                              "async"],
                     help="aggregation mode (--policy is an alias)")
+    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
+                    help="round execution engine: 'eager' dispatches one "
+                         "jit call per round (the semantic reference); "
+                         "'scan' compiles multi-round chunks into one "
+                         "on-device lax.scan with donated state buffers -- "
+                         "bit-identical trajectory, far fewer host syncs "
+                         "(docs/perf.md). async aggregation always runs "
+                         "the event engine; --terminate is checked per "
+                         "8-round chunk under scan")
     ap.add_argument("--deadline", type=float, default=0.0,
                     help="deadline policy cutoff in simulated seconds "
                          "(<= 0 means infinite)")

@@ -17,6 +17,11 @@ from repro.sim.server import (           # noqa: F401
     SimMetrics,
     client_work_flops,
 )
+from repro.sim.engine import (           # noqa: F401
+    EngineResult,
+    run_rounds,
+    run_to_objective,
+)
 from repro.sim.transport import (        # noqa: F401
     ByteLedger,
     CodecConfig,

@@ -1,0 +1,440 @@
+"""Fused on-device round engine: scan-compiled multi-round execution.
+
+The eager simulation driver (``FedSim.step``) pays one full host round-trip
+per federated round: a jit dispatch for the selection mask, a device->host
+transfer of the candidates, a host->device upload of the participation
+mask, a jit dispatch for the round function, and (in the CLI) a blocking
+``float(objective)``. At paper scale the round math itself is microseconds
+of FLOPs, so wall-clock is dominated by dispatch overhead -- not by
+anything the paper analyzes.
+
+``run_rounds`` removes the per-round host synchronization for the clocked
+policies (sync / deadline / adaptive / overselect) while reproducing the
+eager trajectory BIT-FOR-BIT (state leaves, PRNG key, simulated clock,
+byte-ledger totals -- pinned by tests/test_engine.py):
+
+1. **Arrival precompute (host).** Per-round arrival times come from the
+   host RNG exactly as in the eager path -- one ``round_arrivals`` draw per
+   round, same call order, so the stream is unchanged. For a K-round chunk
+   this is one (K, m) float64 array, computed up front.
+
+2. **Candidate-stream scan (device).** The selection key stream is
+   deterministic given which rounds abandon (an abandoned round does not
+   advance the key), so one jitted ``lax.scan`` over the chunk replays the
+   per-round ``split``/sampler calls and returns every round's candidate
+   mask in a single transfer. Because abandonment itself depends on the
+   masks, the engine iterates candidate-stream -> host policy to a
+   fixpoint; each pass can only extend the correct abandoned-prefix, so it
+   converges in 1 + (#rounds whose abandoned flag changed) passes --
+   one pass in the common no-abandon case.
+
+3. **Policy replay (host, float64).** Mask + round-duration logic is
+   replayed in numpy, mirroring ``FedSim._apply_policy`` operation for
+   operation (including the float32 casts the jit'd ``arrival_mask``
+   helpers apply), so masks, durations, the simulated clock, and the byte
+   ledger are bit-identical to eager. This is O(K m) numpy -- negligible.
+
+4. **Round scan (device, donated buffers).** The (K, m) mask stream is
+   uploaded once and ``jax.lax.scan`` runs K rounds in one XLA program
+   (``core.fedepm.scan_round`` / ``core.baselines.scan_round`` bodies;
+   with a codec the merge is fused into an extended body). The carried
+   state and EF codec memory are donated (``donate_argnums``), so XLA
+   reuses their buffers across chunks instead of copying. Per-round
+   metrics stack on-device and transfer in ONE ``jax.device_get`` per
+   chunk. Abandoned rounds carry state through via a ``tree_where`` on the
+   whole carry -- the round body still runs, its result is discarded
+   exactly.
+
+Donation invariant: ``run_rounds`` snapshots the entry state (one copy)
+before the first donating call, so references the caller still holds --
+e.g. the ``state=s0`` it passed to ``FedSim`` -- stay valid; every
+intermediate chunk state is engine-owned and safely donated.
+
+The async policy is event-driven (client-level queue, data-dependent
+control flow) and cannot be scan-compiled; ``run_rounds`` falls back to
+the eager event path, which PR 4 batched separately (vectorized event
+pushes, pow2-bucketed row gathers, cached device masks). Architecture
+notes and how to read ``BENCH_engine.json``: docs/perf.md.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, fedepm, participation
+from repro.core.treeutil import tmap, tree_where, tree_where_client
+from repro.sim import clients as simclients
+from repro.sim.server import FedSim, SimMetrics, fifo_cache_get
+from repro.sim.transport import codec_roundtrip, ef_roundtrip
+
+_SCAN_POLICIES = ("sync", "deadline", "adaptive", "overselect")
+
+
+class EngineResult(NamedTuple):
+    metrics: list            # SimMetrics, one per round (same as eager)
+    w_tau: np.ndarray | None  # (K, ...) per-round broadcast point, host side
+
+
+# ---------------------------------------------------------------------------
+# host-side policy replay (bit-identical to FedSim._apply_policy)
+# ---------------------------------------------------------------------------
+
+def _arrival_mask_host(cand: np.ndarray, arr: np.ndarray,
+                       deadline) -> np.ndarray:
+    """numpy replica of participation.arrival_mask as the eager path calls
+    it: arrivals (and per-client cutoffs) pass through jnp.asarray, i.e.
+    FLOAT32, before the comparison -- replicate the cast exactly."""
+    arr32 = arr.astype(np.float32)
+    dl32 = np.asarray(deadline, dtype=np.float32)
+    with np.errstate(invalid="ignore"):
+        return cand & np.isfinite(arr32) & (arr32 <= dl32)
+
+
+def _first_arrivals_host(cand: np.ndarray, arr: np.ndarray,
+                         n_keep: int) -> np.ndarray:
+    """numpy replica of participation.first_arrivals_mask (float32 sort
+    keys, stable order -- jnp.argsort's default)."""
+    t = np.where(cand, arr.astype(np.float32), np.float32(np.inf))
+    order = np.argsort(t, kind="stable")
+    rank = np.empty(len(t), np.int64)
+    rank[order] = np.arange(len(t))
+    return (rank < n_keep) & np.isfinite(t)
+
+
+def _policy_round_host(sim: FedSim, candidates: np.ndarray,
+                       arrivals: np.ndarray):
+    """One round of FedSim._apply_policy, replayed host-side.
+
+    Mask semantics use the same float32 comparisons as the jit'd helpers;
+    round durations use the same float64 numpy arithmetic as the eager
+    driver. Returns (mask, duration); for the adaptive policy this also
+    folds the round's observations into sim.deadlines (the caller
+    snapshots/restores the EWMA around fixpoint passes).
+    """
+    pol = sim.sim.policy
+    t_cand = np.where(candidates, arrivals, np.inf)
+    if pol == "sync":
+        mask = _arrival_mask_host(candidates, arrivals, np.inf)
+        dur = float(t_cand[mask].max()) if mask.any() else 0.0
+        return mask, dur
+    if pol == "deadline":
+        dl = sim.sim.deadline
+        mask = _arrival_mask_host(candidates, arrivals, dl)
+        if not candidates.any():
+            return mask, 0.0
+        finite = t_cand[np.isfinite(t_cand)]
+        if np.isfinite(t_cand[candidates]).all() \
+                and (t_cand[candidates] <= dl).all():
+            return mask, float(t_cand[candidates].max())
+        if np.isfinite(dl):
+            return mask, float(dl)
+        return mask, float(finite.max()) if finite.size else 0.0
+    if pol == "adaptive":
+        cut = sim.deadlines.cutoffs()
+        mask = _arrival_mask_host(candidates, arrivals, cut)
+        wait = np.where(candidates, np.minimum(arrivals, cut), np.inf)
+        finite = wait[np.isfinite(wait)]
+        dur = float(finite.max()) if finite.size else 0.0
+        sim.deadlines.observe(candidates, arrivals)
+        return mask, dur
+    if pol == "overselect":
+        mask = _first_arrivals_host(candidates, arrivals, sim._n_keep)
+        dur = float(t_cand[mask].max()) if mask.any() else 0.0
+        return mask, dur
+    raise ValueError(f"unknown policy {pol!r}")
+
+
+def _policy_stream_host(sim: FedSim, candidates: np.ndarray,
+                        arrivals: np.ndarray):
+    """Replay C rounds of policy logic -> (masks, durs, abandoned, rec_ups)."""
+    C, m = candidates.shape
+    masks = np.zeros((C, m), bool)
+    rec_ups = np.zeros((C, m), bool)
+    durs = np.zeros(C, np.float64)
+    abandoned = np.zeros(C, bool)
+    for t in range(C):
+        cand, arr = candidates[t], arrivals[t]
+        mask, dur = _policy_round_host(sim, cand, arr)
+        ab = bool(cand.any() and not mask.any())
+        if ab:
+            rec = np.zeros(m, bool)
+        elif sim.sim.policy == "adaptive":
+            rec = mask
+        else:
+            rec = cand & np.isfinite(arr) & (arr <= dur + 1e-12)
+        masks[t], durs[t], abandoned[t], rec_ups[t] = mask, dur, ab, rec
+    return masks, durs, abandoned, rec_ups
+
+
+# ---------------------------------------------------------------------------
+# device-side streams (compiled once per FedSim, cached on the instance)
+# ---------------------------------------------------------------------------
+
+# compiled-function caches, shared ACROSS FedSim instances: two sims with
+# the same (round fn, loss fn, algorithm config, codec, batches) -- e.g.
+# the eager and scan arms of a benchmark, or consecutive CLI runs in one
+# process -- reuse one traced/compiled program instead of re-tracing per
+# instance. Batches are keyed by IDENTITY and stay closure-captured like
+# the eager driver's jit does: embedding them as XLA constants is what
+# keeps the scan bit-identical to eager (constant-vs-argument batches
+# change XLA's folding by 1 ulp); the cached closure keeps them alive, so
+# the id cannot be recycled while the entry exists. Both caches are
+# bounded (server.fifo_cache_get): a chunk-fn closure pins its whole
+# dataset on device, so an unbounded cache would leak one dataset per
+# swept task.
+_CAND_STREAM_CACHE: dict = {}
+_CHUNK_FN_CACHE: dict = {}
+
+
+def _candidate_stream_fn(sim: FedSim):
+    key = (sim.cfg, sim.sim.policy, sim.sim.overselect_factor)
+    return fifo_cache_get(_CAND_STREAM_CACHE, key,
+                          lambda: _build_candidate_stream(sim), cap=32)
+
+
+def _chunk_fn(sim: FedSim, collect_w_tau: bool):
+    key = (sim._round_fn, sim._loss_fn, sim.cfg, sim.sim.codec, sim._ef,
+           collect_w_tau, id(sim._batches))
+    return fifo_cache_get(_CHUNK_FN_CACHE, key,
+                          lambda: _build_chunk_fn(sim, collect_w_tau),
+                          cap=32)
+
+
+def _build_candidate_stream(sim: FedSim):
+    """Jitted scan replaying the per-round selection key splits.
+
+    carry = (key, k): the key advances (first output of the round's
+    3-way split) and k advances by k0 only on non-abandoned rounds,
+    mirroring how the eager driver leaves the state untouched when a round
+    is abandoned. Returns the (C, m) candidate-mask stream.
+    """
+    cfg = sim.cfg
+    m, k0 = cfg.m, cfg.k0
+    if sim.sim.policy == "overselect":
+        rho_eff = min(1.0, cfg.rho * sim.sim.overselect_factor)
+
+        def select(k_sel, k):
+            return participation.sample_uniform(k_sel, m, rho_eff)
+    else:
+        sampler = getattr(cfg, "sampler", "uniform")
+        if sampler == "uniform":
+            def select(k_sel, k):
+                return participation.sample_uniform(k_sel, m, cfg.rho)
+        elif sampler == "coverage":
+            def select(k_sel, k):
+                return participation.sample_coverage(
+                    k_sel, m, cfg.rho, k // k0, cfg.s0)
+        elif sampler == "full":
+            def select(k_sel, k):
+                return jnp.ones((m,), bool)
+        else:
+            raise ValueError(f"unknown sampler {sampler!r}")
+
+    def stream(key, k, abandoned):
+        def body(carry, ab):
+            key, k = carry
+            next_key, k_sel, _ = jax.random.split(key, 3)
+            cand = select(k_sel, k)
+            key = jnp.where(ab, key, next_key)
+            k = jnp.where(ab, k, k + jnp.asarray(k0, k.dtype))
+            return (key, k), cand
+
+        _, cands = jax.lax.scan(body, (key, k), abandoned)
+        return cands
+
+    return jax.jit(stream)
+
+
+def _build_chunk_fn(sim: FedSim, collect_w_tau: bool):
+    """Jitted K-round scan with donated (state, codec-memory) buffers.
+
+    The body is the scan-compatible round (core.fedepm.scan_round /
+    the equivalent baselines body) with the upload-codec merge fused in;
+    ys stacks per-round RoundMetrics (and optionally w_tau) on-device.
+    """
+    round_fn = sim._round_fn
+    batches, loss_fn, cfg = sim._batches, sim._loss_fn, sim.cfg
+    codec, ef = sim.sim.codec, sim._ef
+    if sim.alg == "fedepm":
+        def core_body(st, xs):
+            return fedepm.scan_round(st, xs, batches, loss_fn, cfg)
+    else:
+        def core_body(st, xs):
+            return baselines.scan_round(st, xs, batches, loss_fn, cfg,
+                                        round_fn)
+
+    def chunk(state, H, codec_key, masks, abandoned, round_idx):
+        def body(carry, x):
+            st, Hc = carry
+            mask, ab, ridx = x
+            if codec is None:
+                st2, rm = core_body(st, (mask, ab))
+                ys = (rm, st2.w_tau) if collect_w_tau else (rm,)
+                return (st2, Hc), ys
+            new_st, rm = round_fn(st, batches, loss_fn, cfg, mask=mask)
+            ckey = jax.random.fold_in(codec_key, ridx)
+            if ef:
+                dec = ef_roundtrip(new_st.Z, Hc, ckey, codec)
+                new_st = new_st._replace(
+                    Z=tree_where_client(mask, dec, st.Z))
+                Hn = tree_where_client(mask, dec, Hc)
+            else:
+                dec = codec_roundtrip(new_st.Z, st.Z, ckey, codec)
+                new_st = new_st._replace(
+                    Z=tree_where_client(mask, dec, st.Z))
+                Hn = Hc
+            st2 = tree_where(ab, st, new_st)
+            Hc2 = tree_where(ab, Hc, Hn)
+            ys = (rm, st2.w_tau) if collect_w_tau else (rm,)
+            return (st2, Hc2), ys
+
+        return jax.lax.scan(body, (state, H), (masks, abandoned, round_idx))
+
+    return jax.jit(chunk, donate_argnums=(0, 1))
+
+
+def _copy_tree(tree):
+    return tmap(lambda x: jnp.array(x, copy=True), tree)
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
+def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
+               collect_w_tau: bool = False) -> EngineResult:
+    """Advance ``sim`` by ``rounds`` rounds via the fused scan engine.
+
+    Drop-in replacement for ``sim.run(rounds)``: ``sim.state``, ``sim.t``,
+    ``sim.metrics``, ``sim.ledger``, ``sim.round_idx`` and
+    ``sim.last_round_metrics`` end up bit-identical to the eager driver's.
+    ``chunk`` bounds the rounds compiled into one scan (default: all of
+    ``rounds``; each distinct chunk length compiles once per FedSim).
+    ``collect_w_tau=True`` additionally stacks every round's broadcast
+    point on-device and returns it host-side -- O(rounds * n_params)
+    memory, meant for objective evaluation on small tasks (the CLI), not
+    for LM-scale states.
+
+    The async policy falls back to the eager event engine (see module
+    docstring); metrics/state are whatever that path produces.
+    """
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1; got {rounds}")
+    if sim.sim.policy == "async":
+        mets = []
+        w_parts = [] if collect_w_tau else None
+        for _ in range(rounds):
+            mets.append(sim.step())
+            if collect_w_tau:
+                w_parts.append(np.asarray(sim.state.w_tau))
+                sim.host_syncs += 1
+        return EngineResult(
+            mets, np.stack(w_parts) if collect_w_tau else None)
+    if sim.sim.policy not in _SCAN_POLICIES:
+        raise ValueError(f"unknown policy {sim.sim.policy!r}")
+
+    cand_stream = _candidate_stream_fn(sim)
+    chunk_fn = _chunk_fn(sim, collect_w_tau)
+
+    # donation invariant: snapshot the entry state once so buffers the
+    # caller may still reference are never donated; all later chunk states
+    # are engine-owned
+    sim.state = _copy_tree(sim.state)
+    H = _copy_tree(sim._H) if sim._ef else jnp.zeros((), jnp.float32)
+
+    chunk = rounds if chunk is None or chunk < 1 else min(chunk, rounds)
+    out_metrics: list[SimMetrics] = []
+    w_parts: list[np.ndarray] = []
+    done = 0
+    while done < rounds:
+        C = min(chunk, rounds - done)
+        # 1. arrivals: same host-RNG stream as C eager steps
+        arrivals = np.stack([
+            simclients.round_arrivals(
+                sim.profiles, sim._rng, sim._latency,
+                work_flops=sim._work, down_bytes=sim._down_bytes,
+                up_bytes=sim._up_bytes)
+            for _ in range(C)])
+        # 2./3. candidate-stream + policy replay to the abandoned fixpoint
+        ewma0 = sim.deadlines.ewma.copy() \
+            if sim.sim.policy == "adaptive" else None
+        abandoned = np.zeros(C, bool)
+        for _ in range(C + 1):
+            cands = np.asarray(cand_stream(
+                sim.state.key, sim.state.k, jnp.asarray(abandoned)))
+            sim.host_syncs += 1
+            if ewma0 is not None:
+                sim.deadlines.ewma = ewma0.copy()
+            masks, durs, ab_new, rec_ups = _policy_stream_host(
+                sim, cands, arrivals)
+            if np.array_equal(ab_new, abandoned):
+                break
+            abandoned = ab_new
+        else:  # pragma: no cover - the prefix argument guarantees progress
+            raise RuntimeError("abandoned-round fixpoint did not converge")
+        # 4. one donated scan over the chunk
+        ridx0 = sim.round_idx
+        (sim.state, H), ys = chunk_fn(
+            sim.state, H, sim._codec_key,
+            jnp.asarray(masks), jnp.asarray(abandoned),
+            jnp.arange(ridx0, ridx0 + C, dtype=jnp.int32))
+        rm_stack = ys[0]
+        if collect_w_tau:
+            w_parts.append(np.asarray(jax.device_get(ys[1])))
+            sim.host_syncs += 1
+
+        # host bookkeeping, identical to C eager steps
+        live = np.flatnonzero(~abandoned)
+        if live.size:
+            sim.last_round_metrics = tmap(
+                lambda y: y[int(live[-1])], rm_stack)
+        for t in range(C):
+            brec = sim.ledger.record_round(
+                down_mask=cands[t], up_mask=rec_ups[t],
+                down_bytes=sim._down_bytes, up_bytes=sim._up_bytes)
+            sim.t += float(durs[t])
+            n_cont = int(cands[t].sum())
+            n_agg = int(masks[t].sum())
+            m = SimMetrics(
+                round_idx=sim.round_idx, t_round=float(durs[t]),
+                t_total=sim.t, n_contacted=n_cont, n_aggregated=n_agg,
+                n_dropped=n_cont - n_agg, bytes_down=brec["down"],
+                bytes_up=brec["up"], abandoned=bool(abandoned[t]))
+            sim.metrics.append(m)
+            out_metrics.append(m)
+            sim.round_idx += 1
+        done += C
+    if sim._ef:
+        sim._H = H
+    return EngineResult(
+        out_metrics, np.concatenate(w_parts) if collect_w_tau else None)
+
+
+def run_to_objective(sim: FedSim, objective_fn, target: float, *,
+                     max_rounds: int, chunk: int = 16) -> tuple:
+    """Scan-engine race helper: run until the objective reaches ``target``.
+
+    ``objective_fn`` maps the stacked (C, ...) per-round broadcast points
+    to a (C,) vector of objective values -- ONE evaluation per chunk, so
+    objective monitoring costs one dispatch per chunk instead of one per
+    round (a per-round host ``float(f(w))`` would hand the dispatch
+    overhead the engine removed straight back). Returns
+    (rounds_to_target, hit: bool, objective at that round).
+    """
+    total = 0
+    f = math.inf
+    while total < max_rounds:
+        C = min(chunk, max_rounds - total)
+        res = run_rounds(sim, C, collect_w_tau=True)
+        fs = np.asarray(objective_fn(jnp.asarray(res.w_tau)))
+        sim.host_syncs += 1
+        for fv in fs:
+            total += 1
+            f = float(fv)
+            if f <= target:
+                return total, True, f
+    return total, False, f

@@ -153,23 +153,34 @@ class SimMetrics(NamedTuple):
 
 @dataclasses.dataclass
 class _Contribution:
-    """One in-flight client upload (async policy)."""
+    """One in-flight client upload (async policy).
+
+    The dispatch group's uploaded rows are gathered into ONE stacked batch
+    per group (``_fire_group``); each contribution references its row of
+    that shared batch instead of holding a privately sliced (1, ...) copy,
+    so a g-client dispatch costs one gather per leaf, not 2g slice ops.
+    """
 
     client: int
     version: int   # server version at dispatch (staleness anchor)
     serial: int    # global upload serial (codec dither provenance)
-    z_row: Any     # (1, ...) slice of the dispatch's upload tree
-    w_row: Any     # (1, ...) slice of the dispatch's iterate tree
+    z_batch: Any   # (g_pad, ...) stacked upload rows of the dispatch group
+    w_batch: Any   # (g_pad, ...) stacked iterate rows of the dispatch group
+    row: int       # this client's row within the batch
 
 
 @functools.partial(jax.jit, static_argnames=("codec", "ef"))
-def _merge_contribution(Z, W, H, z_row, w_row, idx, gamma, key, *,
-                        codec: CodecConfig | None, ef: bool):
+def _merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
+                        key, *, codec: CodecConfig | None, ef: bool):
     """Fold one arrived upload into the server's stacked state.
 
-    The upload is decoded first (codec memoryless fallback = the server's
-    CURRENT stale row; with error feedback the shared memory row in H),
-    then staleness-merged: Z_i <- gamma * z_hat + (1 - gamma) * Z_i. The
+    ``batch_row`` selects the contribution's row out of its dispatch
+    group's shared (g_pad, ...) batch (a dynamic slice, so one compiled
+    program serves every row; group batches are padded to power-of-two
+    sizes, bounding recompiles to log2 of the cohort). The upload is
+    decoded first (codec memoryless fallback = the server's CURRENT stale
+    row; with error feedback the shared memory row in H), then
+    staleness-merged: Z_i <- gamma * z_hat + (1 - gamma) * Z_i. The
     gamma >= 1 branch replaces the row EXACTLY (no arithmetic), which is
     what makes the zero-staleness trajectory bit-identical to sync. W_i is
     replaced outright -- it is the client's own iterate, which the client
@@ -179,10 +190,18 @@ def _merge_contribution(Z, W, H, z_row, w_row, idx, gamma, key, *,
         return tmap(
             lambda x: jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=0), tree)
 
+    def batch(tree):
+        return tmap(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, batch_row, 1, axis=0),
+            tree)
+
     def set_row(tree, r):
         return tmap(
             lambda x, rr: jax.lax.dynamic_update_slice_in_dim(
                 x, rr.astype(x.dtype), idx, axis=0), tree, r)
+
+    z_row = batch(z_batch)
+    w_row = batch(w_batch)
 
     if codec is None:
         z_hat = z_row
@@ -237,6 +256,35 @@ _ALGS: dict[str, tuple[Callable, Callable]] = {
     "sfedprox": (baselines.sfedprox_round, baselines.default_round_mask),
 }
 
+# jitted-program cache shared ACROSS FedSim instances (bounded FIFO): a
+# fresh per-instance ``jax.jit(lambda ...)`` re-traces on every
+# construction, so benchmark/test code that builds many sims over the same
+# (round fn, loss fn, config, batches) pays a full trace+compile per
+# instance. Batches are keyed by identity; the cached closure keeps them
+# alive, so the id cannot be recycled while the entry exists.
+# ``fifo_cache_get`` is the one get-or-build-with-eviction helper; the
+# engine's compiled-chunk caches (repro.sim.engine) use it too.
+_JIT_CACHE: dict = {}
+
+
+def fifo_cache_get(cache: dict, key, build: Callable, *, cap: int = 64):
+    """Bounded memo: build-on-miss, FIFO eviction once ``cap`` is reached.
+
+    Entries hold compiled closures that may pin device buffers (batches),
+    so the bound is what keeps long sweeps over many tasks from leaking
+    one dataset per cache entry.
+    """
+    fn = cache.get(key)
+    if fn is None:
+        if len(cache) >= cap:
+            cache.pop(next(iter(cache)))
+        fn = cache[key] = build()
+    return fn
+
+
+def _shared_jit(key, build: Callable):
+    return fifo_cache_get(_JIT_CACHE, key, build)
+
 
 class FedSim:
     """Drives one algorithm under one aggregation policy over simulated time.
@@ -273,6 +321,14 @@ class FedSim:
         self.cfg = cfg
         self.sim = sim
         self.state = state
+        # raw round ingredients for the fused scan engine (repro.sim.engine
+        # traces its own multi-round body over them) plus a device->host
+        # transfer counter both engines report in BENCH_engine.json
+        self._round_fn = round_fn
+        self._batches = batches
+        self._loss_fn = loss_fn
+        self.host_syncs = 0
+        self._mask_cache: dict[bytes, jax.Array] = {}
         self.profiles = profiles if profiles is not None \
             else simclients.uniform_profiles(cfg.m)
         if self.profiles.m != cfg.m:
@@ -283,8 +339,11 @@ class FedSim:
         self._rng = np.random.default_rng(sim.seed)
         self._codec_key = jax.random.PRNGKey(sim.seed ^ 0x5EED)
 
-        self._step = jax.jit(
-            lambda s, mask: round_fn(s, batches, loss_fn, cfg, mask))
+        jit_key = (round_fn, loss_fn, cfg, id(batches))
+        self._step = _shared_jit(
+            ("step", *jit_key),
+            lambda: jax.jit(
+                lambda s, mask: round_fn(s, batches, loss_fn, cfg, mask)))
         # baselines accept a decoupled aggregation anchor (agg_mask) so the
         # async client-level scheduler can average eq. (34) over the whole
         # cohort while only a sub-group computes; fedepm's ENS already
@@ -292,10 +351,14 @@ class FedSim:
         if alg == "fedepm":
             self._step_agg = None
         else:
-            self._step_agg = jax.jit(
-                lambda s, mask, agg: round_fn(s, batches, loss_fn, cfg,
-                                              mask, agg_mask=agg))
-        self._default_mask = jax.jit(lambda s: mask_fn(s, cfg))
+            self._step_agg = _shared_jit(
+                ("step_agg", *jit_key),
+                lambda: jax.jit(
+                    lambda s, mask, agg: round_fn(s, batches, loss_fn, cfg,
+                                                  mask, agg_mask=agg)))
+        self._default_mask = _shared_jit(
+            ("mask", mask_fn, cfg),
+            lambda: jax.jit(lambda s: mask_fn(s, cfg)))
         if sim.policy == "overselect":
             # over-selection draws its own (bigger) uniform candidate set;
             # a coverage/full sampler's guarantee would be silently lost,
@@ -306,11 +369,15 @@ class FedSim:
                     f"got cfg.sampler={cfg.sampler!r}")
             rho_eff = min(1.0, cfg.rho * sim.overselect_factor)
 
-            def cand(s):
-                _, k_sel, _ = jax.random.split(s.key, 3)
-                return participation.sample_uniform(k_sel, cfg.m, rho_eff)
+            def build_cand():
+                def cand(s):
+                    _, k_sel, _ = jax.random.split(s.key, 3)
+                    return participation.sample_uniform(k_sel, cfg.m,
+                                                        rho_eff)
+                return jax.jit(cand)
 
-            self._candidates = jax.jit(cand)
+            self._candidates = _shared_jit(
+                ("cand_over", cfg.m, rho_eff), build_cand)
         else:
             self._candidates = self._default_mask
         self._n_keep = min(cfg.m, max(1, math.ceil(cfg.rho * cfg.m)))
@@ -330,21 +397,27 @@ class FedSim:
             codec = sim.codec
             if codec.error_feedback:
 
-                @jax.jit
-                def codec_merge_ef(z_new, H, z_prev, mask, key):
-                    dec = ef_roundtrip(z_new, H, key, codec)
-                    return (tree_where_client(mask, dec, z_prev),
-                            tree_where_client(mask, dec, H))
+                def build_merge_ef():
+                    @jax.jit
+                    def codec_merge_ef(z_new, H, z_prev, mask, key):
+                        dec = ef_roundtrip(z_new, H, key, codec)
+                        return (tree_where_client(mask, dec, z_prev),
+                                tree_where_client(mask, dec, H))
+                    return codec_merge_ef
 
-                self._codec_merge_ef = codec_merge_ef
+                self._codec_merge_ef = _shared_jit(
+                    ("codec_merge_ef", codec), build_merge_ef)
             else:
 
-                @jax.jit
-                def codec_merge(z_new, z_prev, mask, key):
-                    z_dec = codec_roundtrip(z_new, z_prev, key, codec)
-                    return tree_where_client(mask, z_dec, z_prev)
+                def build_merge():
+                    @jax.jit
+                    def codec_merge(z_new, z_prev, mask, key):
+                        z_dec = codec_roundtrip(z_new, z_prev, key, codec)
+                        return tree_where_client(mask, z_dec, z_prev)
+                    return codec_merge
 
-                self._codec_merge = codec_merge
+                self._codec_merge = _shared_jit(
+                    ("codec_merge", codec), build_merge)
 
         if sim.policy == "adaptive":
             self.deadlines = simclients.AdaptiveDeadlines(
@@ -385,6 +458,25 @@ class FedSim:
         """Dense broadcast wire bytes one contacted client receives."""
         return self._down_bytes
 
+    def _dev_mask(self, mask: np.ndarray) -> jax.Array:
+        """Device copy of a host boolean mask, cached by value.
+
+        The async event path re-dispatches the same masks over and over
+        (singleton groups under a concurrency cap, the live-cohort anchor
+        between draws); uploading each occurrence anew costs one allocation
+        + transfer per EVENT. The cache keys on the mask bytes, so each
+        distinct mask is uploaded once per simulation (bounded FIFO, masks
+        are m bools each).
+        """
+        key = mask.tobytes()
+        buf = self._mask_cache.get(key)
+        if buf is None:
+            if len(self._mask_cache) >= 1024:
+                self._mask_cache.pop(next(iter(self._mask_cache)))
+            buf = jnp.asarray(mask)
+            self._mask_cache[key] = buf
+        return buf
+
     # -- policy -------------------------------------------------------------
 
     def _apply_policy(self, candidates: np.ndarray, arrivals: np.ndarray):
@@ -395,6 +487,7 @@ class FedSim:
         drift; only the round-duration bookkeeping is computed here.
         """
         pol = self.sim.policy
+        self.host_syncs += 1  # each branch transfers one jit'd mask back
         cand_j = jnp.asarray(candidates)
         arr_j = jnp.asarray(arrivals)
         t_cand = np.where(candidates, arrivals, np.inf)
@@ -442,6 +535,7 @@ class FedSim:
         if self.sim.policy == "async":
             return self._step_async()
         candidates = np.asarray(self._candidates(self.state))
+        self.host_syncs += 1
         arrivals = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
@@ -515,6 +609,7 @@ class FedSim:
         aggregation anchor the baselines' agg_mask hook receives.
         """
         candidates = np.asarray(self._candidates(self.state))
+        self.host_syncs += 1
         durations = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
@@ -525,12 +620,26 @@ class FedSim:
         self._ev_contacted += int(offline.sum())
         self._ev_dropped += int(offline.sum())
         self._ev_down += offline.astype(np.int64)
-        for i in np.flatnonzero(live):
-            heapq.heappush(self._events, (self.t, self._eseq, _EV_START,
-                                          (int(i), float(durations[i]))))
-            self._eseq += 1
-            self._n_queued_starts += 1
-        return int(live.sum())
+        live_idx = np.flatnonzero(live)
+        if live_idx.size:
+            base = self._eseq
+            entries = [(self.t, base + j, _EV_START,
+                        (int(i), float(durations[i])))
+                       for j, i in enumerate(live_idx)]
+            # batched insert: extend + one O(n) heapify when the group is
+            # a sizeable fraction of the heap; per-entry O(log n) pushes
+            # when it is not (heapify re-sifts the WHOLE heap, a loss for
+            # a singleton draw into a deep queue)
+            n_heap = len(self._events)
+            if live_idx.size * max(1, n_heap.bit_length()) >= n_heap:
+                self._events.extend(entries)
+                heapq.heapify(self._events)
+            else:
+                for e in entries:
+                    heapq.heappush(self._events, e)
+            self._eseq += int(live_idx.size)
+            self._n_queued_starts += int(live_idx.size)
+        return int(live_idx.size)
 
     def _fire_group(self, group: list[tuple[int, float]]) -> None:
         """Broadcast to ``group`` NOW: run the round function once over its
@@ -553,19 +662,28 @@ class FedSim:
             # NEWER cohort draw came up all-offline while this group sat
             # stalled (an empty mean would broadcast a zero vector).
             new_state, rmetrics = self._step_agg(
-                self.state, jnp.asarray(mask),
-                jnp.asarray(self._cohort_live | mask))
+                self.state, self._dev_mask(mask),
+                self._dev_mask(self._cohort_live | mask))
         else:
-            new_state, rmetrics = self._step(self.state, jnp.asarray(mask))
+            new_state, rmetrics = self._step(self.state, self._dev_mask(mask))
         self.state = self.state._replace(
             w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
         self.last_round_metrics = rmetrics
         self._n_inflight += len(group)
-        for i, dur in group:
+        # one gather per leaf for the whole group's upload/iterate rows
+        # (vs 2 slice ops per CLIENT); indices pad to the next power of two
+        # (repeating the last) so _merge_contribution compiles per pow2
+        # bucket, not per group size
+        idx = np.fromiter((i for i, _ in group), np.int64, len(group))
+        pad = 1 << (len(group) - 1).bit_length() if len(group) > 1 else 1
+        rows = jnp.asarray(np.concatenate(
+            [idx, np.full(pad - len(group), idx[-1], np.int64)]))
+        z_batch = tmap(lambda x: x[rows], new_state.Z)
+        w_batch = tmap(lambda x: x[rows], new_state.W)
+        for j, (i, dur) in enumerate(group):
             c = _Contribution(
                 client=i, version=self._version, serial=self._serial,
-                z_row=tmap(lambda x: x[i:i + 1], new_state.Z),
-                w_row=tmap(lambda x: x[i:i + 1], new_state.W))
+                z_batch=z_batch, w_batch=w_batch, row=j)
             heapq.heappush(self._events,
                            (self.t + dur, self._eseq, _EV_UPLOAD, c))
             self._eseq += 1
@@ -635,7 +753,8 @@ class FedSim:
             gamma = participation.staleness_weight(s, self.sim.staleness_exp)
             key = jax.random.fold_in(self._codec_key, c.serial)
             Z, W, H = _merge_contribution(
-                self.state.Z, self.state.W, self._H, c.z_row, c.w_row,
+                self.state.Z, self.state.W, self._H, c.z_batch, c.w_batch,
+                jnp.asarray(c.row, jnp.int32),
                 jnp.asarray(c.client, jnp.int32),
                 jnp.asarray(gamma, jnp.float32), key,
                 codec=self.sim.codec, ef=self._ef)

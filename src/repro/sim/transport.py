@@ -7,7 +7,12 @@ being exchanged (not a hand-waved parameter count): the server->client
 broadcast moves one dense copy of w^{tau+1} per contacted client, the
 client->server upload moves one (possibly encoded) copy of z_i per client
 whose upload completed within the round. ``ByteLedger`` accumulates both
-per round and per client, host-side.
+per round and per client, host-side -- in INTEGER units wherever the wire
+size is exact (dense and whole-byte quantized payloads), falling back to
+float only for fractional sizes (sub-byte bit-packing, top-k index
+estimates), so long simulations cannot drift. Wire-size computations are
+memoized per (treedef, leaf shapes, codec): repeated calls stop re-walking
+the pytree.
 
 Upload codec (top-k sparsification + uniform stochastic quantization)
 ---------------------------------------------------------------------
@@ -23,6 +28,20 @@ exactly, and with topk_frac=1, bits=0 the codec is the identity. Dropped
 coordinates are a per-coordinate analogue of the paper's eq. (22)
 carry-through (the server reuses the stalest value it holds).
 
+Batched multi-leaf encode (PR 4)
+--------------------------------
+The round-trip no longer loops leaf by leaf. Every (leaf, client) pair
+becomes one row of a single padded 2-D array (leaves grouped by dtype,
+padded to the group's widest flat leaf), so a whole pytree encodes in ONE
+top-k + ONE fused ``quantize_cols`` kernel launch (kernels/quant/batch.py;
+column-bounded: row i quantizes its leading kcols[i] live columns and
+passes the fallback through elsewhere). The padded layout -- per-leaf keep
+counts, row offsets -- is planned once per (treedef, leaf shapes, codec)
+and cached. The dither stream is drawn per GROUP over the padded layout,
+so compressed values differ from the pre-batched per-leaf stream in the
+last stochastic bit; all codec laws (unbiasedness, error bounds, exact
+top-k touch counts) are unchanged and pinned by tests.
+
 Wire format accounted per client per leaf (n coords, k kept):
     dense  (k == n):  n * bits/8 payload + 4 B scale
     sparse (k <  n):  k * bits/8 payload + k * index_bytes + 4 B scale
@@ -34,9 +53,10 @@ The memoryless round-trip above silently BIASES the eq. (22) update: the
 dropped/rounded-away part of every upload is lost each round. With error
 feedback, client and server share a codec memory h_i; the wire carries
 C(z_i - h_i) and both sides accumulate h_i <- h_i + C(z_i - h_i)
-(kernels/quant fused ``ef_accumulate`` pair), so compressed trajectories
-converge to the uncompressed objective (tests/test_sim_async.py pins the
-contraction). Same wire format, same byte accounting.
+(kernels/quant fused ``ef_accumulate`` pair, run over the same stacked
+multi-leaf rows), so compressed trajectories converge to the uncompressed
+objective (tests/test_sim_async.py pins the contraction). Same wire
+format, same byte accounting.
 """
 from __future__ import annotations
 
@@ -56,16 +76,39 @@ tmap = jax.tree_util.tree_map
 # byte accounting
 # ---------------------------------------------------------------------------
 
+def _leaf_meta(leaves) -> tuple:
+    """Hashable (shape, dtype) signature of a flattened pytree."""
+    return tuple((tuple(x.shape), str(x.dtype)) for x in leaves)
+
+
+# wire-size memos: keyed by (treedef, leaf signature[, codec]) -- a process
+# touches a handful of state trees, so these stay tiny, but each hit saves
+# a full pytree walk on the dispatch path
+_DENSE_BYTES_CACHE: dict = {}
+_STACKED_BYTES_CACHE: dict = {}
+_ENCODED_BYTES_CACHE: dict = {}
+
+
 def tree_client_bytes(tree) -> int:
     """Dense wire bytes of ONE client's pytree (leaves without client axis)."""
-    return sum(x.size * x.dtype.itemsize
-               for x in jax.tree_util.tree_leaves(tree))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, _leaf_meta(leaves))
+    got = _DENSE_BYTES_CACHE.get(key)
+    if got is None:
+        got = _DENSE_BYTES_CACHE[key] = sum(
+            x.size * x.dtype.itemsize for x in leaves)
+    return got
 
 
 def stacked_client_bytes(tree) -> int:
     """Dense wire bytes of ONE client's slice of a stacked (m, ...) pytree."""
-    return sum((x.size // x.shape[0]) * x.dtype.itemsize
-               for x in jax.tree_util.tree_leaves(tree))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, _leaf_meta(leaves))
+    got = _STACKED_BYTES_CACHE.get(key)
+    if got is None:
+        got = _STACKED_BYTES_CACHE[key] = sum(
+            (x.size // x.shape[0]) * x.dtype.itemsize for x in leaves)
+    return got
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,28 +144,62 @@ def _leaf_k(n: int, frac: float) -> int:
 
 
 def encoded_client_bytes(tree, codec: CodecConfig | None) -> float:
-    """Wire bytes of ONE client's (possibly encoded) upload of a stacked tree."""
+    """Wire bytes of ONE client's (possibly encoded) upload of a stacked tree.
+
+    Memoized per (treedef, leaf shapes/dtypes, codec). FedSim snapshots
+    this size once per construction -- the per-dispatch billing uses that
+    float -- so the memo pays off where sims are built in bulk over the
+    same trees (benchmark grids, test suites) and where trees have many
+    leaves (LM-scale states), not on the round hot path.
+    """
     if codec is None:
         return float(stacked_client_bytes(tree))
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, _leaf_meta(leaves), codec)
+    got = _ENCODED_BYTES_CACHE.get(key)
+    if got is not None:
+        return got
     total = 0.0
-    for x in jax.tree_util.tree_leaves(tree):
+    for x in leaves:
         n = x.size // x.shape[0]
         k = _leaf_k(n, codec.topk_frac)
         payload = k * (codec.bits / 8.0 if codec.bits else x.dtype.itemsize)
         index = 0.0 if k == n else k * codec.index_bytes
         scale = 4.0 if codec.bits else (0.0 if k == n else 4.0)
         total += payload + index + scale
+    _ENCODED_BYTES_CACHE[key] = total
     return total
 
 
 class ByteLedger:
-    """Per-round, per-client cumulative communication record (host-side)."""
+    """Per-round, per-client cumulative communication record (host-side).
+
+    Per-client byte counters accumulate in int64 whenever the per-transfer
+    wire size is a whole number of bytes (dense trees, whole-byte quantized
+    payloads) and in float64 only otherwise (sub-byte packing / fractional
+    top-k estimates), so integer-exact paths cannot accumulate float
+    rounding drift over long runs. ``up``/``down`` expose the combined
+    float64 view; totals are bit-identical to the all-float accumulation
+    for every size below 2^53.
+    """
 
     def __init__(self, m: int):
         self.m = m
-        self.up = np.zeros(m)        # cumulative uplink bytes per client
-        self.down = np.zeros(m)      # cumulative downlink bytes per client
+        self._up_i = np.zeros(m, np.int64)
+        self._down_i = np.zeros(m, np.int64)
+        self._up_f = np.zeros(m, np.float64)
+        self._down_f = np.zeros(m, np.float64)
         self.rounds: list[dict] = []
+
+    @property
+    def up(self) -> np.ndarray:
+        """(m,) cumulative uplink bytes per client (float64 view)."""
+        return self._up_i + self._up_f
+
+    @property
+    def down(self) -> np.ndarray:
+        """(m,) cumulative downlink bytes per client (float64 view)."""
+        return self._down_i + self._down_f
 
     def record_round(self, *, down_mask: np.ndarray, up_mask: np.ndarray,
                      down_bytes: float, up_bytes) -> dict:
@@ -147,8 +224,14 @@ class ByteLedger:
         up_pc = np.broadcast_to(np.asarray(up_bytes, np.float64), (self.m,))
         d = down_counts * float(down_bytes)
         u = up_counts * up_pc
-        self.down += d
-        self.up += u
+        if float(down_bytes).is_integer():
+            self._down_i += down_counts * np.int64(down_bytes)
+        else:
+            self._down_f += d
+        if np.all(up_pc == np.floor(up_pc)):
+            self._up_i += up_counts * up_pc.astype(np.int64)
+        else:
+            self._up_f += u
         rec = {"round": len(self.rounds), "down": float(d.sum()),
                "up": float(u.sum()), "n_down": int((down_counts > 0).sum()),
                "n_up": int((up_counts > 0).sum())}
@@ -157,11 +240,11 @@ class ByteLedger:
 
     @property
     def total_up(self) -> float:
-        return float(self.up.sum())
+        return float(self._up_i.sum() + self._up_f.sum())
 
     @property
     def total_down(self) -> float:
-        return float(self.down.sum())
+        return float(self._down_i.sum() + self._down_f.sum())
 
     @property
     def total(self) -> float:
@@ -169,37 +252,133 @@ class ByteLedger:
 
 
 # ---------------------------------------------------------------------------
+# batched multi-leaf encode plan (cached per treedef/shapes/codec)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _GroupPlan:
+    """One dtype group of the padded 2-D layout.
+
+    ``index``/``shape``/``n``/``k`` are per-leaf (flattened-tree position,
+    stacked shape, flat coordinate count, keep count); rows of the stacked
+    array are leaf-major: rows [l*m, (l+1)*m) belong to leaf l.
+    """
+
+    index: tuple[int, ...]
+    shape: tuple[tuple[int, ...], ...]
+    n: tuple[int, ...]
+    k: tuple[int, ...]
+    n_max: int
+    k_max: int
+    dense: bool       # every leaf keeps all coordinates (k == n)
+
+
+_PLAN_CACHE: dict = {}
+
+
+def _codec_plan(treedef, leaves, codec: CodecConfig) -> tuple[_GroupPlan, ...]:
+    key = (treedef, _leaf_meta(leaves), codec)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        return plan
+    by_dtype: dict[str, list[int]] = {}
+    for i, x in enumerate(leaves):
+        by_dtype.setdefault(str(x.dtype), []).append(i)
+    groups = []
+    for idxs in by_dtype.values():
+        ns = tuple(leaves[i].size // leaves[i].shape[0] for i in idxs)
+        ks = tuple(_leaf_k(n, codec.topk_frac) for n in ns)
+        groups.append(_GroupPlan(
+            index=tuple(idxs),
+            shape=tuple(tuple(leaves[i].shape) for i in idxs),
+            n=ns, k=ks, n_max=max(ns), k_max=max(ks),
+            dense=all(k == n for k, n in zip(ks, ns))))
+    plan = _PLAN_CACHE[key] = tuple(groups)
+    return plan
+
+
+def _stack_rows(leaves, gp: _GroupPlan) -> jax.Array:
+    """Group leaves -> (len(gp.index) * m, n_max) leaf-major row stack."""
+    m = leaves[0].shape[0]
+    rows = []
+    for x, n in zip(leaves, gp.n):
+        flat = x.reshape(m, -1)
+        if n < gp.n_max:
+            flat = jnp.pad(flat, ((0, 0), (0, gp.n_max - n)))
+        rows.append(flat)
+    return jnp.concatenate(rows, axis=0)
+
+
+def _unstack_rows(rows: jax.Array, gp: _GroupPlan, m: int) -> list:
+    return [rows[i * m:(i + 1) * m, :n].reshape(shape)
+            for i, (n, shape) in enumerate(zip(gp.n, gp.shape))]
+
+
+def _group_cols(gp: _GroupPlan, m: int):
+    """Per-row live-coordinate and keep counts, (R,) int32 device consts."""
+    ncols = jnp.asarray(np.repeat(np.asarray(gp.n, np.int32), m))
+    kcols = jnp.asarray(np.repeat(np.asarray(gp.k, np.int32), m))
+    return ncols, kcols
+
+
+def _topk_rows(rows: jax.Array, live32: jax.Array, gp: _GroupPlan):
+    """Top-k_max magnitudes per row over the live columns only.
+
+    ``live32`` masks real coordinates (padding gets magnitude -1, so it is
+    never selected while k <= n). lax.top_k sorts descending with ties
+    broken by lowest index, so truncating a row to its leading k_l columns
+    yields exactly that leaf's per-leaf top-k -- the same set the old
+    leaf-by-leaf encode picked.
+    """
+    mag = jnp.where(live32, jnp.abs(rows.astype(jnp.float32)), -1.0)
+    _, idx = jax.lax.top_k(mag, gp.k_max)
+    return idx
+
+
+# ---------------------------------------------------------------------------
 # codec round-trip (what the server holds after dequantization)
 # ---------------------------------------------------------------------------
 
-def _roundtrip_leaf(z, fallback, key, codec: CodecConfig):
-    """One stacked leaf (m, ...) -> decoded (m, ...)."""
-    m = z.shape[0]
-    shape = z.shape
-    zf = z.reshape(m, -1)
-    n = zf.shape[1]
-    k = _leaf_k(n, codec.topk_frac)
+def _codec_group(z_leaves, fb_leaves, key, codec: CodecConfig,
+                 gp: _GroupPlan):
+    """Fused round-trip of one dtype group; returns decoded leaves."""
+    m = z_leaves[0].shape[0]
+    if gp.dense and not codec.bits:
+        return z_leaves  # every coordinate kept and sent raw: identity
+    R = len(gp.index) * m
+    z_rows = _stack_rows(z_leaves, gp)
+    ncols, kcols = _group_cols(gp, m)
 
-    if k < n:
-        mag = jnp.abs(zf.astype(jnp.float32))
-        _, idx = jax.lax.top_k(mag, k)               # (m, k)
-        vals = jnp.take_along_axis(zf, idx, axis=1)  # (m, k)
-    else:
-        idx = None
-        vals = zf
-
-    if codec.bits:
-        scale = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=1)
-        u32 = (jax.random.bits(key, vals.shape, dtype=jnp.uint32)
+    if gp.dense:
+        # no coordinate dropping: quantize the live columns in place (the
+        # fallback operand passes padding through; it is sliced away)
+        scale = jnp.max(jnp.abs(z_rows.astype(jnp.float32)), axis=1)
+        u32 = (jax.random.bits(key, (R, gp.n_max), dtype=jnp.uint32)
                if codec.stochastic else None)
-        vals = quant_ops.quantize(vals, scale, codec.bits, u32,
-                                  impl=codec.impl)
+        out_rows = quant_ops.quantize_cols(z_rows, z_rows, scale, ncols,
+                                           codec.bits, u32, impl=codec.impl)
+        return _unstack_rows(out_rows, gp, m)
 
-    if idx is None:
-        return vals.reshape(shape)
-    out = jax.vmap(lambda f, i, v: f.at[i].set(v))(
-        fallback.reshape(m, -1), idx, vals)
-    return out.reshape(shape)
+    fb_rows = _stack_rows(fb_leaves, gp)
+    col_n = jnp.arange(gp.n_max, dtype=jnp.int32)[None, :]
+    idx = _topk_rows(z_rows, col_n < ncols[:, None], gp)
+    vals = jnp.take_along_axis(z_rows, idx, axis=1)       # (R, k_max)
+    fbv = jnp.take_along_axis(fb_rows, idx, axis=1)       # (R, k_max)
+    col_k = jnp.arange(gp.k_max, dtype=jnp.int32)[None, :]
+    live = col_k < kcols[:, None]
+    if codec.bits:
+        scale = jnp.max(
+            jnp.where(live, jnp.abs(vals.astype(jnp.float32)), 0.0), axis=1)
+        u32 = (jax.random.bits(key, (R, gp.k_max), dtype=jnp.uint32)
+               if codec.stochastic else None)
+        enc = quant_ops.quantize_cols(vals, fbv, scale, kcols, codec.bits,
+                                      u32, impl=codec.impl)
+    else:
+        enc = jnp.where(live, vals, fbv)
+    # columns past a row's keep count scatter its fallback value back onto
+    # its own index -- a no-op -- so one scatter serves every row width
+    out_rows = jax.vmap(lambda f, i, v: f.at[i].set(v))(fb_rows, idx, enc)
+    return _unstack_rows(out_rows, gp, m)
 
 
 def codec_roundtrip(tree_z, tree_fallback, key: jax.Array,
@@ -207,15 +386,25 @@ def codec_roundtrip(tree_z, tree_fallback, key: jax.Array,
     """Encode + decode every client's upload; stacked (m, ...) pytrees.
 
     ``tree_fallback`` supplies dropped coordinates (the server's stale copy,
-    normally the previous round's Z). Identity when codec is None.
+    normally the previous round's Z). Identity when codec is None. The
+    whole pytree encodes through the fused multi-leaf path: one top-k and
+    one ``quantize_cols`` launch per dtype group, not one of each per leaf.
     """
     if codec is None:
         return tree_z
+    if codec.topk_frac >= 1.0 and not codec.bits:
+        return tree_z  # identity codec
     leaves, treedef = jax.tree_util.tree_flatten(tree_z)
     fb_leaves = jax.tree_util.tree_leaves(tree_fallback)
-    keys = jax.random.split(key, len(leaves))
-    out = [_roundtrip_leaf(z, fb, kk, codec)
-           for z, fb, kk in zip(leaves, fb_leaves, keys)]
+    plan = _codec_plan(treedef, leaves, codec)
+    keys = jax.random.split(key, len(plan))
+    out = list(leaves)
+    for gp, gkey in zip(plan, keys):
+        dec = _codec_group([leaves[i] for i in gp.index],
+                           [fb_leaves[i] for i in gp.index],
+                           gkey, codec, gp)
+        for i, leaf in zip(gp.index, dec):
+            out[i] = leaf
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -223,46 +412,48 @@ def codec_roundtrip(tree_z, tree_fallback, key: jax.Array,
 # error-feedback round-trip (EF21-style codec memory)
 # ---------------------------------------------------------------------------
 
-def _ef_leaf(z, h, key, codec: CodecConfig):
-    """One stacked leaf (m, ...) -> updated shared reconstruction (m, ...).
+def _ef_group(z_leaves, h_leaves, key, codec: CodecConfig, gp: _GroupPlan):
+    """Fused EF step of one dtype group; returns the new shared memories."""
+    m = z_leaves[0].shape[0]
+    if gp.dense and not codec.bits:
+        # wire carries the full residual exactly: bit-exact identity
+        # (h + (z - h) would re-associate in floating point)
+        return z_leaves
+    R = len(gp.index) * m
+    z_rows = _stack_rows(z_leaves, gp)
+    h_rows = _stack_rows(h_leaves, gp)
+    ncols, kcols = _group_cols(gp, m)
 
-    The client transmits C(z - h) (top-k of the RESIDUAL, quantized against
-    the residual's own scale); both sides then hold h' = h + C(z - h). The
-    decoded upload IS h', so as z stabilises the residual -- and with it the
-    compression error -- contracts to zero instead of being re-paid every
-    round. Dense raw (k == n, bits == 0) transmits the residual exactly:
-    return z itself so the identity is bit-exact (h + (z - h) re-associates
-    in floating point).
-    """
-    m = z.shape[0]
-    shape = z.shape
-    zf = z.reshape(m, -1)
-    hf = h.reshape(m, -1)
-    n = zf.shape[1]
-    k = _leaf_k(n, codec.topk_frac)
-    r = zf - hf
-
-    if k == n:
-        if not codec.bits:
-            return z
+    if gp.dense:
+        # fused accumulate H + Q(Z - H) over the whole group's rows;
+        # padding columns have z = h = 0, so they quantize to exactly 0
+        r = z_rows - h_rows
         scale = jnp.max(jnp.abs(r.astype(jnp.float32)), axis=1)
-        u32 = (jax.random.bits(key, r.shape, dtype=jnp.uint32)
+        u32 = (jax.random.bits(key, (R, gp.n_max), dtype=jnp.uint32)
                if codec.stochastic else None)
-        h_new = quant_ops.ef_accumulate(zf, hf, scale, codec.bits, u32,
-                                        impl=codec.impl)
-        return h_new.reshape(shape)
+        out_rows = quant_ops.ef_accumulate(z_rows, h_rows, scale,
+                                           codec.bits, u32, impl=codec.impl)
+        return _unstack_rows(out_rows, gp, m)
 
-    mag = jnp.abs(r.astype(jnp.float32))
-    _, idx = jax.lax.top_k(mag, k)                # (m, k)
-    vals = jnp.take_along_axis(r, idx, axis=1)    # (m, k) residual values
+    r_rows = z_rows - h_rows
+    col_n = jnp.arange(gp.n_max, dtype=jnp.int32)[None, :]
+    idx = _topk_rows(r_rows, col_n < ncols[:, None], gp)
+    vals = jnp.take_along_axis(r_rows, idx, axis=1)       # residual values
+    col_k = jnp.arange(gp.k_max, dtype=jnp.int32)[None, :]
+    live = col_k < kcols[:, None]
     if codec.bits:
-        scale = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=1)
-        u32 = (jax.random.bits(key, vals.shape, dtype=jnp.uint32)
+        scale = jnp.max(
+            jnp.where(live, jnp.abs(vals.astype(jnp.float32)), 0.0), axis=1)
+        u32 = (jax.random.bits(key, (R, gp.k_max), dtype=jnp.uint32)
                if codec.stochastic else None)
-        vals = quant_ops.quantize(vals, scale, codec.bits, u32,
-                                  impl=codec.impl)
-    h_new = jax.vmap(lambda f, i, v: f.at[i].add(v))(hf, idx, vals)
-    return h_new.reshape(shape)
+        enc = quant_ops.quantize_cols(vals, jnp.zeros_like(vals), scale,
+                                      kcols, codec.bits, u32,
+                                      impl=codec.impl)
+    else:
+        enc = jnp.where(live, vals, jnp.zeros_like(vals))
+    # accumulate the (zero-padded past each row's keep count) residual
+    out_rows = jax.vmap(lambda h, i, v: h.at[i].add(v))(h_rows, idx, enc)
+    return _unstack_rows(out_rows, gp, m)
 
 
 def ef_roundtrip(tree_z, tree_h, key: jax.Array, codec: CodecConfig | None):
@@ -272,13 +463,24 @@ def ef_roundtrip(tree_z, tree_h, key: jax.Array, codec: CodecConfig | None):
     the client's last delivered upload; init all-zeros). Returns the NEW
     memory, which is also exactly what the server now holds for each client
     -- callers use it both as the decoded upload and as the next h. Identity
-    when codec is None.
+    when codec is None, and bit-exact identity for the dense raw codec
+    (k == n, bits == 0): the wire then carries the residual exactly, so
+    returning z avoids the h + (z - h) float re-association. Same fused
+    multi-leaf layout as ``codec_roundtrip``.
     """
     if codec is None:
         return tree_z
+    if codec.topk_frac >= 1.0 and not codec.bits:
+        return tree_z  # dense raw residual: exact identity
     leaves, treedef = jax.tree_util.tree_flatten(tree_z)
     h_leaves = jax.tree_util.tree_leaves(tree_h)
-    keys = jax.random.split(key, len(leaves))
-    out = [_ef_leaf(z, h, kk, codec)
-           for z, h, kk in zip(leaves, h_leaves, keys)]
+    plan = _codec_plan(treedef, leaves, codec)
+    keys = jax.random.split(key, len(plan))
+    out = list(leaves)
+    for gp, gkey in zip(plan, keys):
+        dec = _ef_group([leaves[i] for i in gp.index],
+                        [h_leaves[i] for i in gp.index],
+                        gkey, codec, gp)
+        for i, leaf in zip(gp.index, dec):
+            out[i] = leaf
     return jax.tree_util.tree_unflatten(treedef, out)

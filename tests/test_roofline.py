@@ -19,7 +19,10 @@ from repro.models import registry
 
 def _xla_flops(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    return c.cost_analysis().get("flops", 0.0)
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # newer jax returns one dict per device
+        ca = ca[0] if ca else {}
+    return ca.get("flops", 0.0)
 
 
 def test_scan_body_counted_once():
