@@ -27,6 +27,10 @@ The speedup is dispatch-bound: on the reduced task (--quick / default) the
 round math is microseconds and scan wins by the dispatch factor; at the
 paper's full d=45222 (--full) rounds are compute-bound and the gap narrows
 toward 1 -- both regimes are the point (docs/perf.md).
+
+The scenario is ONE declarative spec cell (repro.spec); each timed arm
+builds a fresh sim from it through the same ``spec.build()`` path the
+CLI uses.
 """
 from __future__ import annotations
 
@@ -37,34 +41,35 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import spec as xspec
 from repro.core import fedepm
-from repro.core.tasks import make_logistic_loss
-from repro.data import synth
-from repro.data.partition import partition_iid
-from repro.sim import FedSim, SimConfig, run_rounds, run_to_objective
+from repro.sim import run_rounds, run_to_objective
+from repro.spec.build import task_data
 
 QUICK_KW = dict(d=2000, m=16, k0=4, rounds=120, repeats=3)
-
-
-def _build(cfg, state, batches, loss, seed):
-    return FedSim(alg="fedepm", cfg=cfg, state=state, batches=batches,
-                  loss_fn=loss, sim=SimConfig(policy="sync", seed=seed))
 
 
 def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
           n: int = 14, rounds: int = 60, repeats: int = 3,
           seed: int = 0) -> dict:
-    X, y = synth.adult_like(d=d, n=n, seed=seed)
-    batches = jax.tree_util.tree_map(
-        jnp.asarray, partition_iid(X, y, m=m, seed=seed))
-    loss = make_logistic_loss()
+    # ONE declarative cell describes the benchmark scenario; both timed
+    # engines build fresh sims from it (the spec layer's task memo keeps
+    # the batches device-resident and the jit caches warm across builds,
+    # so the timed regions measure dispatch, not re-tracing)
+    cell = xspec.ExperimentSpec(
+        name="bench-engine", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
+                                      eps_dp=0.0),
+        fleet=xspec.FleetSpec(kind="uniform"),
+        policy=xspec.PolicySpec(name="sync"),
+        engine=xspec.EngineSpec(name="eager", rounds=rounds)).validate()
+    data = task_data(cell)
+    loss, batches = data.loss_fn, data.batches
+    mk = lambda: cell.build().sim  # noqa: E731
     fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
-    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0, eps_dp=0.0)
-    state = fedepm.init_state(jax.random.PRNGKey(seed), jnp.zeros(n), cfg)
-    mk = lambda: _build(cfg, state, batches, loss, seed)  # noqa: E731
 
     # -- warmup: compile both engines' programs outside the timed region --
     # batched per-chunk objective for the scan race: same loss/batches,
@@ -80,7 +85,7 @@ def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
     run_rounds(mk(), rounds)                      # chunk of `rounds`
     s = mk()
     res = run_rounds(s, min(16, rounds), collect_w_tau=True)  # race chunks
-    np.asarray(fobj_chunk(jnp.asarray(res.w_tau)))
+    np.asarray(fobj_chunk(np.asarray(res.w_tau)))
 
     # -- rounds/sec, median over repeats ----------------------------------
     def timed_eager():

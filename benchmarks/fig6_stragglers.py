@@ -11,24 +11,21 @@ dropped. The headline systems claim: under heavy-tail compute jitter the
 straggler-mitigating policies reach the same objective in a fraction of
 sync's simulated time at (near-)identical byte cost.
 
+The grid is a LIST OF EXPERIMENT SPECS (repro.spec, docs/spec.md):
+``grid()`` sweeps one declarative base cell over algorithm x policy (the
+deadline cell's cutoff calibrated per algorithm) and every cell executes
+through the same ``spec.build()`` path the simulate CLI uses. Cells share
+one device copy of the task data via the spec layer's task memo.
+
 Rows: fig6/<alg>/<policy>/time,<sim_seconds * 1e6>,<derived>.
 """
 from __future__ import annotations
 
-import math
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import spec as xspec
 from repro.configs.paper_logreg import termination_reached
-from repro.core import baselines, fedepm
-from repro.core.tasks import make_logistic_loss
-from repro.data import synth
-from repro.data.partition import partition_iid
 from repro.sim import (
-    FedSim,
-    SimConfig,
     client_work_flops,
     make_latency_model,
     make_profiles,
@@ -54,38 +51,33 @@ def _calibrate_deadline(profiles, latency_kind, alpha, work, down_b, up_b,
     return float(np.quantile(t[np.isfinite(t)], q))
 
 
-def _build(alg, policy, *, m, k0, rho, d, n, seed, deadline, alpha, batches,
-           loss):
-    key = jax.random.PRNGKey(seed)
-    w0 = jnp.zeros(n)
-    if alg == "fedepm":
-        cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0,
-                                                 eps_dp=0.0)
-        state = fedepm.init_state(key, w0, cfg)
-    else:
-        cfg = baselines.BaselineConfig(m=m, k0=k0, rho=rho, eps_dp=0.0)
-        state = baselines.init_state(key, w0, cfg)
-    sim_cfg = SimConfig(policy=policy,
-                        deadline=deadline if policy == "deadline"
-                        else math.inf,
-                        overselect_factor=1.5, latency="pareto",
-                        latency_alpha=alpha, seed=seed)
-    profiles = make_profiles(m, seed=seed)
-    return FedSim(alg=alg, cfg=cfg, state=state, batches=batches,
-                  loss_fn=loss, profiles=profiles, sim=sim_cfg)
+def grid(*, d, m, k0, rho, rounds, n, seed, alpha,
+         deadlines) -> list[xspec.ExperimentSpec]:
+    """The fig6 grid as a spec list: ALGS x POLICIES, per-alg cutoffs."""
+    base = xspec.ExperimentSpec(
+        name="fig6", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
+                                      eps_dp=0.0),
+        fleet=xspec.FleetSpec(latency="pareto", latency_alpha=alpha),
+        engine=xspec.EngineSpec(name="eager", rounds=rounds))
+    cells = []
+    for alg in ALGS:
+        policies = [
+            xspec.PolicySpec(name="sync"),
+            xspec.PolicySpec(name="deadline", deadline=deadlines[alg]),
+            xspec.PolicySpec(name="overselect", overselect_factor=1.5),
+        ]
+        cells += xspec.sweep(base.replace(**{"algorithm.name": alg}),
+                             {"policy": policies})
+    return cells
 
 
 def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         rounds: int = 80, n: int = 14, seed: int = 0, alpha: float = 1.2):
-    X, y = synth.adult_like(d=d, n=n, seed=seed)
-    batches = jax.tree_util.tree_map(
-        jnp.asarray, partition_iid(X, y, m=m, seed=seed))
-    loss = make_logistic_loss()
-    fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
-    gsq = jax.jit(lambda w: fedepm.global_grad_sq_norm(loss, w, batches))
-
     profiles = make_profiles(m, seed=seed)
-    down_b = float(tree_client_bytes(jnp.zeros(n)))  # the broadcast w tree
+    # the broadcast w tree (float32, as the sim holds it)
+    down_b = float(tree_client_bytes(np.zeros(n, np.float32)))
     # calibrate the cutoff PER ALGORITHM: SFedAvg does ~k0x FedEPM's work
     # per round, so a FedEPM-calibrated deadline would drop most SFedAvg
     # clients and skew the cross-policy comparison
@@ -98,33 +90,32 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
 
     rows = []
     results: dict[tuple, dict] = {}
-    for alg in ALGS:
-        deadline = deadlines[alg]
-        for policy in POLICIES:
-            sim = _build(alg, policy, m=m, k0=k0, rho=rho, d=d, n=n,
-                         seed=seed, deadline=deadline, alpha=alpha,
-                         batches=batches, loss=loss)
-            f_hist: list[float] = []
-            for _ in range(rounds):
-                sim.step()
-                f_hist.append(float(fobj(sim.state.w_tau)))
-                # the paper's variance criterion fires spuriously on the
-                # flat first rounds (w_tau barely moves while uploads warm
-                # up, especially under heavy drops) -- require a real
-                # history before trusting it
-                if len(f_hist) >= 8 and termination_reached(
-                        f_hist, float(gsq(sim.state.w_tau)), n):
-                    break
-            res = {
-                "f": f_hist[-1] / m, "rounds": len(f_hist),
-                "sim_time": sim.t, "bytes": sim.ledger.total,
-                "dropped": sum(mm.n_dropped for mm in sim.metrics),
-            }
-            results[(alg, policy)] = res
-            rows.append((
-                f"fig6/{alg}/{policy}/time", res["sim_time"] * 1e6,
-                f"f={res['f']:.5f};rounds={res['rounds']};"
-                f"bytes={res['bytes']:.0f};dropped={res['dropped']}"))
+    for cell in grid(d=d, m=m, k0=k0, rho=rho, rounds=rounds, n=n,
+                     seed=seed, alpha=alpha, deadlines=deadlines):
+        alg, policy = cell.algorithm.name, cell.policy.name
+        handle = cell.build()
+        sim = handle.sim
+        f_hist: list[float] = []
+        for _ in range(rounds):
+            sim.step()
+            f_hist.append(float(handle.objective(sim.state.w_tau)))
+            # the paper's variance criterion fires spuriously on the
+            # flat first rounds (w_tau barely moves while uploads warm
+            # up, especially under heavy drops) -- require a real
+            # history before trusting it
+            if len(f_hist) >= 8 and termination_reached(
+                    f_hist, float(handle.grad_sq_norm(sim.state.w_tau)), n):
+                break
+        res = {
+            "f": f_hist[-1] / m, "rounds": len(f_hist),
+            "sim_time": sim.t, "bytes": sim.ledger.total,
+            "dropped": sum(mm.n_dropped for mm in sim.metrics),
+        }
+        results[(alg, policy)] = res
+        rows.append((
+            f"fig6/{alg}/{policy}/time", res["sim_time"] * 1e6,
+            f"f={res['f']:.5f};rounds={res['rounds']};"
+            f"bytes={res['bytes']:.0f};dropped={res['dropped']}"))
 
     # headline: straggler mitigation beats sync on simulated wall-clock at
     # (near-)equal objective; value is the SPEEDUP FACTOR (>1 = faster)

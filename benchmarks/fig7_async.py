@@ -26,6 +26,12 @@ Two experiments on the paper logreg task under a heavy-tail (Pareto) fleet:
    algorithm reports simulated time to ITS OWN sync-run objective, so the
    async-vs-sync speedup is comparable across algorithms.
 
+Every cell is a declarative :class:`repro.spec.ExperimentSpec` (the
+``_cell`` helper varies one base spec per experiment; docs/spec.md), built
+and executed through the same ``spec.build()`` path as the simulate CLI --
+the race loops below only drive ``handle.sim`` and read
+``handle.objective``.
+
 Rows: fig7/<policy>/time_to_target,<sim_seconds * 1e6>,<derived>
       fig7/async/speedup_vs_sync,<factor>
       fig7/codec/gap_{memoryless,error_feedback},<|f - f_raw|>
@@ -40,19 +46,10 @@ import math
 import pathlib
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, fedepm
-from repro.core.tasks import make_logistic_loss
-from repro.data import synth
-from repro.data.partition import partition_iid
+from repro import spec as xspec
 from repro.sim import (
-    CodecConfig,
-    FedSim,
-    LatencyTrace,
-    SimConfig,
     client_work_flops,
     make_latency_model,
     make_profiles,
@@ -78,24 +75,14 @@ def _calibrate_deadline(profiles, alpha, work, down_b, up_b, q: float = 0.8,
     return float(np.quantile(t[np.isfinite(t)], q))
 
 
-def _build(policy, *, cfg, state, batches, loss, profiles, seed, alpha,
-           deadline=math.inf, buffer_size=0, codec=None, alg="fedepm",
-           max_concurrency=0):
-    sim_cfg = SimConfig(policy=policy, deadline=deadline,
-                        latency="pareto", latency_alpha=alpha, seed=seed,
-                        buffer_size=buffer_size, codec=codec,
-                        max_concurrency=max_concurrency)
-    return FedSim(alg=alg, cfg=cfg, state=state, batches=batches,
-                  loss_fn=loss, profiles=profiles, sim=sim_cfg)
-
-
-def _race(sim, fobj, m, f_target: float, max_events: int):
+def _race(handle, m, f_target: float, max_events: int):
     """-> (sim seconds to first f <= f_target, events used, final f)."""
+    sim = handle.sim
     t_hit = None
     f = math.inf
     for _ in range(max_events):
         sim.step()
-        f = float(fobj(sim.state.w_tau)) / m
+        f = float(handle.objective(sim.state.w_tau)) / m
         if t_hit is None and f <= f_target:
             t_hit = sim.t
             break
@@ -105,46 +92,58 @@ def _race(sim, fobj, m, f_target: float, max_events: int):
 def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         rounds: int = 60, n: int = 14, seed: int = 0, alpha: float = 1.2,
         trace_file=TRACE_CSV):
-    X, y = synth.adult_like(d=d, n=n, seed=seed)
-    batches = jax.tree_util.tree_map(
-        jnp.asarray, partition_iid(X, y, m=m, seed=seed))
-    loss = make_logistic_loss()
-    fobj = jax.jit(lambda w: fedepm.global_objective(loss, w, batches))
+    base = xspec.ExperimentSpec(
+        name="fig7", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
+                                      eps_dp=0.0),
+        fleet=xspec.FleetSpec(latency="pareto", latency_alpha=alpha),
+        engine=xspec.EngineSpec(name="eager", rounds=rounds))
 
-    cfg = fedepm.FedEPMConfig.paper_defaults(m=m, rho=rho, k0=k0, eps_dp=0.0)
-    state = fedepm.init_state(jax.random.PRNGKey(seed), jnp.zeros(n), cfg)
+    def _cell(policy_name, *, alg="fedepm", fleet=None, codec=None, **knobs):
+        cell = base.replace(**{
+            "name": f"fig7/{alg}/{policy_name}",
+            "algorithm.name": alg,
+            "policy": xspec.PolicySpec(name=policy_name, **knobs)})
+        if fleet is not None:
+            cell = cell.replace(fleet=fleet)
+        if codec is not None:
+            cell = cell.replace(codec=codec)
+        return cell.validate()
+
     profiles = make_profiles(m, seed=seed)
-    down_b = float(tree_client_bytes(jnp.zeros(n)))
+    down_b = float(tree_client_bytes(np.zeros(n, np.float32)))
     work = client_work_flops("fedepm", k0=k0, n_params=n, d_local=d / m)
     deadline = _calibrate_deadline(profiles, alpha, work, down_b, down_b)
     cohort = max(1, round(rho * m))
     buffer_k = max(1, cohort // 2)
 
-    mk = dict(cfg=cfg, state=state, batches=batches, loss=loss,
-              profiles=profiles, seed=seed, alpha=alpha)
+    def fobj_m(handle):
+        return float(handle.objective(handle.sim.state.w_tau)) / m
 
     # -- 1. uncompressed time-to-target race -------------------------------
-    sync = _build("sync", **mk)
+    sync = _cell("sync").build()
     for _ in range(rounds):
-        sync.step()
-    f_target = float(fobj(sync.state.w_tau)) / m
+        sync.sim.step()
+    f_target = fobj_m(sync)
 
-    rows = [(f"fig7/sync/time_to_target", sync.t * 1e6,
+    rows = [(f"fig7/sync/time_to_target", sync.sim.t * 1e6,
              f"f_target={f_target:.6f};rounds={rounds}")]
-    times = {"sync": sync.t}
+    times = {"sync": sync.sim.t}
     # generous event budgets: one async event does buffer_k/cohort of a
     # round's work; a deadline round drops stragglers and may need extras
     budgets = {"deadline": rounds * 3,
                "async": math.ceil(rounds * 3 * cohort / buffer_k)}
+    cells = {"deadline": _cell("deadline", deadline=deadline),
+             "async": _cell("async", buffer_size=buffer_k)}
     for policy in ("deadline", "async"):
-        sim = _build(policy, deadline=deadline,
-                     buffer_size=buffer_k if policy == "async" else 0, **mk)
-        t_hit, events, f = _race(sim, fobj, m, f_target, budgets[policy])
+        handle = cells[policy].build()
+        t_hit, events, f = _race(handle, m, f_target, budgets[policy])
         times[policy] = t_hit
         extra = ""
         if policy == "async":
             extra = (f";buffer={buffer_k};staleness_max="
-                     f"{max(mm.staleness_max for mm in sim.metrics)}")
+                     f"{max(mm.staleness_max for mm in handle.sim.metrics)}")
         if t_hit is None:
             # e.g. deadline: dropped-straggler bias can floor the objective
             # JUST above the sync endpoint -- that plateau is the finding
@@ -152,8 +151,8 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         rows.append((
             f"fig7/{policy}/time_to_target",
             (t_hit or 0.0) * 1e6,
-            f"f={f:.6f};events={events};bytes={sim.ledger.total:.0f}"
-            + extra))
+            f"f={f:.6f};events={events};"
+            f"bytes={handle.sim.ledger.total:.0f}" + extra))
 
     for policy in ("deadline", "async"):
         t_hit = times[policy]
@@ -166,22 +165,22 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
 
     # -- 2. codec bias: memoryless vs error feedback (async transport) -----
     async_events = math.ceil(rounds * cohort / buffer_k)
-    base = _build("async", buffer_size=buffer_k, **mk)
+    raw = _cell("async", buffer_size=buffer_k).build()
     for _ in range(async_events):
-        base.step()
-    f_raw = float(fobj(base.state.w_tau)) / m
+        raw.sim.step()
+    f_raw = fobj_m(raw)
 
     gaps = {}
     for tag, ef in (("memoryless", False), ("error_feedback", True)):
-        codec = CodecConfig(topk_frac=0.25, bits=8, error_feedback=ef)
-        sim = _build("async", buffer_size=buffer_k, codec=codec, **mk)
+        codec = xspec.CodecSpec(topk_frac=0.25, bits=8, error_feedback=ef)
+        handle = _cell("async", buffer_size=buffer_k, codec=codec).build()
         for _ in range(async_events):
-            sim.step()
-        f = float(fobj(sim.state.w_tau)) / m
+            handle.sim.step()
+        f = fobj_m(handle)
         gaps[tag] = abs(f - f_raw)
         rows.append((f"fig7/codec/gap_{tag}", gaps[tag],
                      f"f={f:.6f};f_raw={f_raw:.6f};"
-                     f"bytes_up={sim.ledger.total_up:.0f}"))
+                     f"bytes_up={handle.sim.ledger.total_up:.0f}"))
     rows.append((
         "fig7/codec/ef_gap_shrink",
         0.0 if gaps["error_feedback"] == 0
@@ -193,26 +192,20 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
     # identical client-level async semantics for every algorithm: same
     # event engine, concurrency cap, buffer and staleness weighting; the
     # baselines anchor eq. (34) on the cohort via the agg_mask round hook
-    trace_prof = LatencyTrace.load(trace_file).sample_profiles(m, seed=seed)
+    trace_fleet = xspec.FleetSpec(kind="trace", trace_file=str(trace_file),
+                                  latency="pareto", latency_alpha=alpha)
     cap = max(1, cohort // 2)
     for alg in ("fedepm", "sfedavg"):
-        if alg == "fedepm":
-            acfg, astate = cfg, state
-        else:
-            acfg = baselines.BaselineConfig(m=m, k0=k0, rho=rho, eps_dp=0.0)
-            astate = baselines.init_state(jax.random.PRNGKey(seed),
-                                          jnp.zeros(n), acfg)
-        amk = dict(cfg=acfg, state=astate, batches=batches, loss=loss,
-                   profiles=trace_prof, seed=seed, alpha=alpha, alg=alg)
-        tsync = _build("sync", **amk)
+        tsync = _cell("sync", alg=alg, fleet=trace_fleet).build()
         for _ in range(rounds):
-            tsync.step()
-        f_target_a = float(fobj(tsync.state.w_tau)) / m
-        tasync = _build("async", buffer_size=buffer_k,
-                        max_concurrency=cap, **amk)
-        t_hit, events, f = _race(tasync, fobj, m, f_target_a,
+            tsync.sim.step()
+        f_target_a = fobj_m(tsync)
+        tasync = _cell("async", alg=alg, fleet=trace_fleet,
+                       buffer_size=buffer_k, max_concurrency=cap).build()
+        t_hit, events, f = _race(tasync, m, f_target_a,
                                  math.ceil(rounds * 3 * cohort / buffer_k))
-        stale = max((mm.staleness_max for mm in tasync.metrics), default=0)
+        stale = max((mm.staleness_max for mm in tasync.sim.metrics),
+                    default=0)
         rows.append((
             f"fig7/trace/{alg}/time_to_target", (t_hit or 0.0) * 1e6,
             f"f={f:.6f};f_target={f_target_a:.6f};events={events};"
@@ -221,8 +214,8 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
             + ("" if t_hit else ";NOT_REACHED")))
         rows.append((
             f"fig7/trace/{alg}/speedup_vs_sync",
-            0.0 if not t_hit else tsync.t / t_hit,
-            f"sync={tsync.t:.4g}s;" + (
+            0.0 if not t_hit else tsync.sim.t / t_hit,
+            f"sync={tsync.sim.t:.4g}s;" + (
                 f"async={t_hit:.4g}s" if t_hit else "async=NOT_REACHED")))
     return rows
 

@@ -4,6 +4,11 @@
 Full grids take tens of minutes on this CPU host; the default profile is
 a reduced-but-faithful grid (documented per module). Pass --full for the
 paper's complete grids, --quick for CI-speed smoke values.
+
+The systems modules (fig6/fig7/engine) define their grids as lists of
+declarative experiment specs (repro.spec, docs/spec.md) and execute every
+cell through the same ``spec.build()`` path as the simulate CLI; the
+kwargs this driver passes them only size the grid.
 """
 from __future__ import annotations
 

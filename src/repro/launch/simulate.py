@@ -7,7 +7,15 @@ accuracy). The algorithm math is exactly core/'s -- the sim only decides
 WHO participates (from simulated arrival times) and WHAT the server holds
 (dequantized uploads when the codec is on).
 
+The CLI is a thin shim over the declarative experiment spec layer
+(``repro.spec``, docs/spec.md): legacy flags are mapped onto an
+``ExperimentSpec`` and built through the same ``spec.build()`` path a
+``--spec`` file takes, with bit-for-bit identical trajectories either way.
+
 Usage:
+  python -m repro.launch.simulate --spec examples/specs/fig7_async.toml
+  python -m repro.launch.simulate --spec examples/specs/golden_sync.toml \
+      --engine scan --rounds 50              # spec file + overrides
   python -m repro.launch.simulate --alg fedepm --aggregation deadline \
       --deadline 0.002 --latency pareto --m 50 --rounds 30 --d 4000
   python -m repro.launch.simulate --alg fedepm --aggregation sync \
@@ -28,9 +36,11 @@ level dispatch: per-client start/upload events with an optional
 --max-concurrency in-flight cap, aggregate every --buffer-size arrivals
 with staleness-weighted merges; one reported "round" = one aggregation
 event; all three algorithms run under identical async semantics).
-``--policy`` is accepted as an alias of ``--aggregation``. Device fleets
-come from --trace-file (resampled real logs) or the synthetic lognormal
-profiles. Full semantics: docs/sim.md.
+``--policy`` is accepted as an alias of ``--aggregation``. A knob that
+belongs to a different policy than the one selected is an ERROR, not
+silently ignored (the spec layer enforces the same ownership rules).
+Device fleets come from --trace-file (resampled real logs) or the
+synthetic lognormal profiles. Full semantics: docs/sim.md.
 
 ``--engine scan`` runs the clocked policies through the fused on-device
 round engine (repro.sim.engine): K rounds compile into one ``lax.scan``
@@ -45,144 +55,126 @@ from __future__ import annotations
 
 import argparse
 import json
-import math
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.paper_logreg import termination_reached
-from repro.core import baselines, fedepm
-from repro.core.tasks import accuracy_logistic, make_logistic_loss
-from repro.data import synth
-from repro.data.partition import partition_iid
-from repro.sim import (
-    CodecConfig,
-    FedSim,
-    LatencyTrace,
-    SimConfig,
-    make_profiles,
-    run_rounds,
+from repro.spec import (
+    AlgorithmSpec,
+    CodecSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FleetSpec,
+    PolicySpec,
+    SpecError,
+    TaskSpec,
 )
+from repro.spec.build import SIM_KNOB_DEFAULTS
+from repro.spec.registry import ASYNC_KNOBS
+
+# argparse defaults for the policy-scoped knobs -- the SINGLE source both
+# for ap.add_argument(default=...) and for the unset test in
+# spec_from_args (a value AT its default is treated as "unset", so the
+# ownership validation only fires for knobs the user actually supplied;
+# the async knobs use None sentinels instead -- passing their literal
+# default to the wrong policy must still error). The values themselves
+# come from SimConfig's dataclass defaults (repro.spec.build), except
+# --deadline whose CLI surface keeps the historical "<= 0 means
+# infinite" encoding of SimConfig's inf default.
+_KNOB_DEFAULTS = {
+    "deadline": 0.0,
+    "overselect": SIM_KNOB_DEFAULTS["overselect_factor"],
+    "deadline_slack": SIM_KNOB_DEFAULTS["deadline_slack"],
+    "ewma_beta": SIM_KNOB_DEFAULTS["ewma_beta"],
+}
 
 
-def build_sim(args) -> tuple[FedSim, dict]:
-    X, y = synth.adult_like(d=args.d, n=args.n, seed=args.seed)
-    batches = jax.tree_util.tree_map(
-        jnp.asarray, partition_iid(X, y, m=args.m, seed=args.seed))
-    loss = make_logistic_loss()
-    key = jax.random.PRNGKey(args.seed)
-    w0 = jnp.zeros(args.n)
+def spec_from_args(args) -> ExperimentSpec:
+    """Map the legacy flag surface onto an ExperimentSpec.
 
-    if args.alg == "fedepm":
-        cfg = fedepm.FedEPMConfig.paper_defaults(
-            m=args.m, rho=args.rho, k0=args.k0, eps_dp=args.eps)
-        state = fedepm.init_state(key, w0, cfg)
+    The mapping is exact: building the returned spec reproduces the
+    trajectory the historical ``build_sim`` flag plumbing produced,
+    bit-for-bit (tests/test_spec.py).
+    """
+    policy_kw = {}
+    if args.deadline > 0:                          # <= 0 means infinite
+        policy_kw["deadline"] = args.deadline      # misplaced -> SpecError
+    if args.aggregation == "overselect" \
+            or args.overselect != _KNOB_DEFAULTS["overselect"]:
+        policy_kw["overselect_factor"] = args.overselect
+    if args.aggregation == "adaptive":
+        policy_kw["deadline_slack"] = args.deadline_slack
+        policy_kw["ewma_beta"] = args.ewma_beta
     else:
-        cfg = baselines.BaselineConfig(m=args.m, k0=args.k0, rho=args.rho,
-                                       eps_dp=args.eps)
-        state = baselines.init_state(key, w0, cfg)
+        for knob in ("deadline_slack", "ewma_beta"):
+            if getattr(args, knob) != _KNOB_DEFAULTS[knob]:
+                policy_kw[knob] = getattr(args, knob)
+    for knob in sorted(ASYNC_KNOBS):               # None = not passed
+        if getattr(args, knob) is not None:
+            policy_kw[knob] = getattr(args, knob)
 
-    codec = None
-    if args.topk < 1.0 or args.bits > 0:
-        codec = CodecConfig(topk_frac=args.topk,
-                            bits=args.bits, impl=args.quant_impl,
-                            error_feedback=args.error_feedback)
-    sim_cfg = SimConfig(
-        policy=args.aggregation,
-        deadline=args.deadline if args.deadline > 0 else math.inf,
-        overselect_factor=args.overselect,
-        latency=args.latency, latency_sigma=args.latency_sigma,
-        latency_alpha=args.latency_alpha, seed=args.seed, codec=codec,
-        buffer_size=args.buffer_size, staleness_exp=args.staleness_exp,
-        max_concurrency=args.max_concurrency,
-        deadline_slack=args.deadline_slack, ewma_beta=args.ewma_beta)
     if args.trace_file:
-        profiles = LatencyTrace.load(args.trace_file).sample_profiles(
-            args.m, seed=args.seed)
+        fleet = FleetSpec(kind="trace", trace_file=args.trace_file,
+                          latency=args.latency,
+                          latency_sigma=args.latency_sigma,
+                          latency_alpha=args.latency_alpha)
     else:
-        profiles = make_profiles(args.m, seed=args.seed,
-                                 availability=args.availability)
-    sim = FedSim(alg=args.alg, cfg=cfg, state=state, batches=batches,
-                 loss_fn=loss, profiles=profiles, sim=sim_cfg)
-    aux = {"X": X, "y": y, "batches": batches, "loss": loss, "n": args.n}
-    return sim, aux
+        fleet = FleetSpec(
+            kind="synthetic",
+            availability=args.availability if args.availability != 1.0
+            else None,
+            latency=args.latency, latency_sigma=args.latency_sigma,
+            latency_alpha=args.latency_alpha)
+
+    return ExperimentSpec(
+        name=f"cli/{args.alg}-{args.aggregation}",
+        seed=args.seed,
+        task=TaskSpec(kind="logreg", d=args.d, n=args.n, m=args.m),
+        algorithm=AlgorithmSpec(name=args.alg, rho=args.rho, k0=args.k0,
+                                eps_dp=args.eps),
+        fleet=fleet,
+        policy=PolicySpec(name=args.aggregation, **policy_kw),
+        codec=CodecSpec(topk_frac=args.topk, bits=args.bits,
+                        impl=args.quant_impl,
+                        error_feedback=args.error_feedback),
+        engine=EngineSpec(name=args.engine, rounds=args.rounds,
+                          terminate=args.terminate))
+
+
+def resolve_spec(args) -> ExperimentSpec:
+    """--spec file (plus explicit overrides) or the legacy-flag mapping."""
+    if not args.spec:
+        return spec_from_args(args).validate()
+    exp = ExperimentSpec.load(args.spec)
+    overrides = {}
+    if args.engine_flag is not None:
+        overrides["engine.name"] = args.engine_flag
+    if args.rounds_flag is not None:
+        overrides["engine.rounds"] = args.rounds_flag
+    if args.terminate_flag:
+        overrides["engine.terminate"] = True
+    if args.seed_flag is not None:
+        overrides["seed"] = args.seed_flag
+    return (exp.replace(**overrides) if overrides else exp).validate()
 
 
 def run(args) -> dict:
-    sim, aux = build_sim(args)
-    loss, batches = aux["loss"], aux["batches"]
-    fobj = jax.jit(
-        lambda w: fedepm.global_objective(loss, w, batches))
-    gsq = jax.jit(
-        lambda w: fedepm.global_grad_sq_norm(loss, w, batches))
+    exp = resolve_spec(args)
+    handle = exp.build()
+    m = exp.task.m
 
-    f_hist: list[float] = []
-    rounds_run = 0
+    def report(met, f):
+        if args.quiet:
+            return
+        head = (f"round {met.round_idx:3d}  f/m={f / m:.6f}  " if f is not None
+                else f"round {met.round_idx:3d}  ")
+        print(head
+              + f"t={met.t_total:9.4f}s (+{met.t_round:.4f})  "
+                f"agg={met.n_aggregated}/{met.n_contacted} "
+                f"drop={met.n_dropped}  "
+                f"up={met.bytes_up/1e3:.1f}kB "
+                f"down={met.bytes_down/1e3:.1f}kB"
+              + ("  ABANDONED" if met.abandoned else ""), flush=True)
 
-    def report(m, f):
-        if not args.quiet:
-            print(f"round {m.round_idx:3d}  f/m={f / args.m:.6f}  "
-                  f"t={m.t_total:9.4f}s (+{m.t_round:.4f})  "
-                  f"agg={m.n_aggregated}/{m.n_contacted} "
-                  f"drop={m.n_dropped}  "
-                  f"up={m.bytes_up/1e3:.1f}kB down={m.bytes_down/1e3:.1f}kB"
-                  + ("  ABANDONED" if m.abandoned else ""), flush=True)
-
-    def terminated() -> bool:
-        # the paper's variance criterion fires spuriously on a flat start
-        # (abandoned rounds leave f_hist at f(w0)): require history AND at
-        # least one aggregated round before trusting it -- an all-abandoned
-        # run reaches the round cap and shows abandoned_rounds == rounds
-        progressed = any(not mm.abandoned for mm in sim.metrics)
-        return (args.terminate and progressed and len(f_hist) >= 8
-                and termination_reached(
-                    f_hist, float(gsq(sim.state.w_tau)), aux["n"]))
-
-    if args.engine == "scan":
-        # fused scan engine: rounds execute in compiled on-device chunks
-        # (bit-identical trajectory; async falls back to the event path
-        # inside run_rounds). Termination is checked at chunk granularity
-        # -- per-round under --terminate via chunk=1-sized budget of 8.
-        chunk = 8 if args.terminate else args.rounds
-        while rounds_run < args.rounds:
-            todo = min(chunk, args.rounds - rounds_run)
-            res = run_rounds(sim, todo, collect_w_tau=True)
-            for m, w in zip(res.metrics, res.w_tau):
-                f_hist.append(float(fobj(jnp.asarray(w))))
-                report(m, f_hist[-1])
-            rounds_run += todo
-            if terminated():
-                break
-    else:
-        for r in range(args.rounds):
-            m = sim.step()
-            rounds_run += 1
-            f_hist.append(float(fobj(sim.state.w_tau)))
-            report(m, f_hist[-1])
-            if terminated():
-                break
-
-    acc = float(accuracy_logistic(sim.state.w_tau, jnp.asarray(aux["X"]),
-                                  jnp.asarray(aux["y"])))
-    dropped = sum(m.n_dropped for m in sim.metrics)
-    summary = {
-        "alg": args.alg, "policy": args.aggregation, "engine": args.engine,
-        "latency": args.latency,
-        "rounds": rounds_run, "f_final": f_hist[-1] / args.m,
-        "accuracy": acc, "sim_time_s": sim.t,
-        "stragglers_dropped": dropped,
-        "abandoned_rounds": sum(m.abandoned for m in sim.metrics),
-        "bytes_up": sim.ledger.total_up, "bytes_down": sim.ledger.total_down,
-        "bytes_total": sim.ledger.total,
-        "up_bytes_per_client_round": sim.up_bytes_per_client,
-    }
-    if args.aggregation == "async":
-        summary["staleness_max"] = max(m.staleness_max for m in sim.metrics)
-        summary["staleness_mean"] = float(np.mean(
-            [m.staleness_mean for m in sim.metrics if not m.abandoned]
-            or [0.0]))
+    summary = handle.run(report=report)
     if not args.quiet:
         print("\nsummary:")
         for k, v in summary.items():
@@ -194,6 +186,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Federated systems simulation (stragglers, deadlines, "
                     "byte ledger) on the paper logreg task")
+    ap.add_argument("--spec", default=None,
+                    help="ExperimentSpec file (.toml/.json, docs/spec.md); "
+                         "replaces the legacy flags below -- only "
+                         "--engine/--rounds/--terminate/--seed override "
+                         "the file, plus --quiet/--json")
     ap.add_argument("--alg", default="fedepm",
                     choices=["fedepm", "sfedavg", "sfedprox"])
     ap.add_argument("--aggregation", "--policy", dest="aggregation",
@@ -201,7 +198,8 @@ def main(argv=None):
                     choices=["sync", "deadline", "adaptive", "overselect",
                              "async"],
                     help="aggregation mode (--policy is an alias)")
-    ap.add_argument("--engine", default="eager", choices=["eager", "scan"],
+    ap.add_argument("--engine", dest="engine_flag", default=None,
+                    choices=["eager", "scan"],
                     help="round execution engine: 'eager' dispatches one "
                          "jit call per round (the semantic reference); "
                          "'scan' compiles multi-round chunks into one "
@@ -209,24 +207,30 @@ def main(argv=None):
                          "bit-identical trajectory, far fewer host syncs "
                          "(docs/perf.md). async aggregation always runs "
                          "the event engine; --terminate is checked per "
-                         "8-round chunk under scan")
-    ap.add_argument("--deadline", type=float, default=0.0,
+                         "8-round chunk under scan. Default: eager, or the "
+                         "spec file's engine")
+    ap.add_argument("--deadline", type=float,
+                    default=_KNOB_DEFAULTS["deadline"],
                     help="deadline policy cutoff in simulated seconds "
                          "(<= 0 means infinite)")
-    ap.add_argument("--buffer-size", type=int, default=0,
+    ap.add_argument("--buffer-size", type=int, default=None,
                     help="async: contributions per aggregation event "
                          "(0 = cohort size, which recovers sync exactly)")
-    ap.add_argument("--staleness-exp", type=float, default=0.5,
-                    help="async: stale merges weighted (1+s)^-exp")
-    ap.add_argument("--max-concurrency", type=int, default=0,
+    ap.add_argument("--staleness-exp", type=float, default=None,
+                    help="async: stale merges weighted (1+s)^-exp "
+                         "(default 0.5)")
+    ap.add_argument("--max-concurrency", type=int, default=None,
                     help="async: cap on in-flight clients; dispatches past "
                          "the cap queue until an upload frees a slot "
                          "(0 = unlimited, which dispatches whole cohorts)")
-    ap.add_argument("--deadline-slack", type=float, default=2.0,
+    ap.add_argument("--deadline-slack", type=float,
+                    default=_KNOB_DEFAULTS["deadline_slack"],
                     help="adaptive: per-client wait budget = slack * EWMA")
-    ap.add_argument("--ewma-beta", type=float, default=0.3,
+    ap.add_argument("--ewma-beta", type=float,
+                    default=_KNOB_DEFAULTS["ewma_beta"],
                     help="adaptive: EWMA weight of the newest latency")
-    ap.add_argument("--overselect", type=float, default=1.5,
+    ap.add_argument("--overselect", type=float,
+                    default=_KNOB_DEFAULTS["overselect"],
                     help="over-selection factor: contact a uniform "
                          "candidate set at rate rho*f, keep the first "
                          "ceil(rho*m) arrivals")
@@ -247,7 +251,8 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=14)
     ap.add_argument("--d", type=int, default=4000,
                     help="dataset size (4000 = reduced task; paper: 45222)")
-    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--rounds", dest="rounds_flag", type=int, default=None,
+                    help="round budget (default 30, or the spec file's)")
     ap.add_argument("--rho", type=float, default=0.5)
     ap.add_argument("--k0", type=int, default=8)
     ap.add_argument("--eps", type=float, default=0.0,
@@ -261,15 +266,54 @@ def main(argv=None):
                          "against the shared reconstruction)")
     ap.add_argument("--quant-impl", default="ref",
                     choices=["ref", "pallas"])
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--terminate", action="store_true",
+    ap.add_argument("--seed", dest="seed_flag", type=int, default=None,
+                    help="master seed (default 0, or the spec file's)")
+    ap.add_argument("--terminate", dest="terminate_flag",
+                    action="store_true",
                     help="stop at the paper's termination rule")
     ap.add_argument("--quiet", action="store_true")
     ap.add_argument("--json", default=None,
                     help="write the summary dict to this path")
     args = ap.parse_args(argv)
+
+    # legacy-surface defaults (the spec file's values win under --spec)
+    args.engine = args.engine_flag or "eager"
+    args.rounds = args.rounds_flag if args.rounds_flag is not None else 30
+    args.seed = args.seed_flag if args.seed_flag is not None else 0
+    args.terminate = args.terminate_flag
+
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
+    if args.buffer_size is not None and args.buffer_size < 0:
+        ap.error("--buffer-size must be >= 0 (0 = cohort size)")
+    if args.max_concurrency is not None and args.max_concurrency < 0:
+        ap.error("--max-concurrency must be >= 0 (0 = unlimited)")
+    if args.staleness_exp is not None and args.staleness_exp < 0:
+        ap.error("--staleness-exp must be >= 0")
+    if args.spec:
+        # the spec file IS the experiment; a legacy flag alongside it
+        # would be silently ignored, which the spec layer forbids --
+        # detectably-supplied ones (off-default) are hard errors
+        ignored = [f"--{k.replace('_', '-')}"
+                   for k in ("alg", "aggregation", "deadline", "overselect",
+                             "deadline_slack", "ewma_beta", "latency",
+                             "latency_sigma", "latency_alpha",
+                             "availability", "trace_file", "m", "n", "d",
+                             "rho", "k0", "eps", "topk", "bits",
+                             "error_feedback", "quant_impl",
+                             *sorted(ASYNC_KNOBS))
+                   if getattr(args, k) != ap.get_default(k)]
+        if ignored:
+            ap.error(f"{', '.join(ignored)} cannot be combined with "
+                     f"--spec (the file defines the experiment; only "
+                     f"--engine/--rounds/--terminate/--seed override it)")
+    elif args.aggregation != "async":
+        passed = [f"--{k.replace('_', '-')}" for k in sorted(ASYNC_KNOBS)
+                  if getattr(args, k) is not None]
+        if passed:
+            ap.error(f"{', '.join(passed)} only valid with "
+                     f"--aggregation async; got --aggregation "
+                     f"{args.aggregation}")
     if args.error_feedback and args.topk >= 1.0 and args.bits == 0:
         ap.error("--error-feedback needs a lossy codec: set --topk < 1 "
                  "and/or --bits > 0")
@@ -277,7 +321,10 @@ def main(argv=None):
         ap.error("--availability conflicts with --trace-file: the trace's "
                  "own availability column defines the fleet")
 
-    summary = run(args)
+    try:
+        summary = run(args)
+    except SpecError as e:
+        ap.error(str(e))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=1)

@@ -7,16 +7,96 @@ launch/steps.py).
 
     PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
         --devices 8 --mesh-shape 4,2 --rounds 3 --reduced
+
+Federated mode (``--spec``): an lm-kind ExperimentSpec (docs/spec.md)
+runs the arch through the SAME FedSim round loop as the logreg sim --
+aggregation policies, device fleets, upload codecs, and the fused scan
+engine all apply to the LM task, closing the "wire the sim into the
+LM-scale launch path" roadmap item:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --spec examples/specs/lm_federated.toml
 """
 import argparse
 import os
 import sys
 
 
+def run_spec(args) -> int:
+    """Federated-simulation mode: drive the spec's LM arch through
+    FedSim/the scan engine (repro.spec.build.RunHandle)."""
+    import time
+
+    from repro.spec import ExperimentSpec, SpecError
+
+    try:
+        exp = ExperimentSpec.load(args.spec)
+        if args.rounds_flag is not None:
+            exp = exp.replace(**{"engine.rounds": args.rounds_flag})
+        if args.engine_flag is not None:
+            exp = exp.replace(**{"engine.name": args.engine_flag})
+        exp.validate()
+        if exp.task.kind != "lm":
+            raise SpecError(
+                f"train --spec expects an lm-kind task (this is the "
+                f"LM-scale launcher); got kind={exp.task.kind!r} -- run "
+                f"logreg specs via python -m repro.launch.simulate --spec")
+        handle = exp.build()
+    except SpecError as e:
+        print(f"SPEC ERROR: {e}", file=sys.stderr)
+        return 2
+    import jax
+
+    cfg = handle.data.aux["arch_cfg"]
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        handle.data.params0))
+    print(f"spec={exp.name} arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"m={exp.task.m} alg={exp.algorithm.name} "
+          f"policy={exp.policy.name} engine={exp.engine.name} "
+          f"rounds={exp.engine.rounds}")
+
+    t0 = time.time()
+
+    def report(met, f):
+        loss_str = f"loss={f / exp.task.m:.4f}  " if f is not None else ""
+        print(f"round {met.round_idx:3d}  {loss_str}"
+              f"t_sim={met.t_total:.3f}s  "
+              f"agg={met.n_aggregated}/{met.n_contacted}  "
+              f"up={met.bytes_up/1e6:.2f}MB  ({time.time()-t0:.1f}s)",
+              flush=True)
+
+    summary = handle.run(report=report)
+    print(f"\nfinal loss/m={summary['f_final']:.4f}  "
+          f"sim_time={summary['sim_time_s']:.3f}s  "
+          f"bytes_total={summary['bytes_total']:.0f}  "
+          f"({time.time()-t0:.1f}s wall)")
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1)
+    if args.checkpoint:
+        from repro.checkpoint import save
+        save(args.checkpoint, jax.device_get(handle.sim.state.w_tau),
+             {"arch": cfg.name, "spec": exp.name})
+        print("saved", args.checkpoint)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=None,
+                    help="lm-kind ExperimentSpec file: run the arch "
+                         "FEDERATED through the systems sim (FedSim + "
+                         "eager/scan engine) instead of the pjit mesh "
+                         "path; --rounds/--engine override the file")
+    ap.add_argument("--engine", dest="engine_flag", default=None,
+                    choices=["eager", "scan"],
+                    help="(--spec only) round engine override")
+    ap.add_argument("--json", default=None,
+                    help="(--spec only) write the run summary dict here")
     ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--rounds", dest="rounds_flag", type=int, default=None,
+                    help="round budget (default: 3, or the --spec file's)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced config (CPU-sized)")
     ap.add_argument("--devices", type=int, default=0,
@@ -31,6 +111,22 @@ def main(argv=None):
                     help="override global batch (0 = production 256)")
     ap.add_argument("--checkpoint", default=None)
     args = ap.parse_args(argv)
+
+    if args.spec:
+        # the spec file defines the experiment; a mesh-path flag alongside
+        # it would be silently ignored, which the spec layer forbids
+        # (same contract as simulate.py) -- only --rounds/--engine
+        # override the file, plus --json/--checkpoint outputs
+        ignored = [f"--{k.replace('_', '-')}"
+                   for k in ("arch", "reduced", "devices", "mesh_shape",
+                             "ens", "k0", "seq", "global_batch")
+                   if getattr(args, k) != ap.get_default(k)]
+        if ignored:
+            ap.error(f"{', '.join(ignored)} cannot be combined with "
+                     f"--spec (the file defines the experiment; only "
+                     f"--rounds/--engine override it)")
+        return run_spec(args)
+    args.rounds = args.rounds_flag if args.rounds_flag is not None else 3
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (

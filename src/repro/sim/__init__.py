@@ -1,13 +1,17 @@
 """Federated systems runtime: straggler simulation, sync/deadline/adaptive/
 overselect/async-buffered aggregation, upload codec with optional error
 feedback, and a byte-accurate communication ledger around the core round
-functions. Architecture notes live in docs/sim.md."""
+functions. Architecture notes live in docs/sim.md; the declarative
+experiment layer that drives this runtime from TOML/JSON specs is
+repro.spec (docs/spec.md)."""
 from repro.sim.clients import (          # noqa: F401
     AdaptiveDeadlines,
     ClientProfiles,
     LatencyTrace,
+    latency_model_names,
     make_latency_model,
     make_profiles,
+    register_latency_model,
     round_arrivals,
     uniform_profiles,
 )

@@ -43,6 +43,7 @@ import numpy as np
 NOMINAL_FLOPS = 1e9
 
 LatencyModel = Callable[[np.random.Generator, int], np.ndarray]
+LatencyFactory = Callable[..., LatencyModel]  # kwargs: sigma, alpha
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,18 +219,47 @@ class LatencyTrace:
             availability=self.availability[idx])
 
 
+# latency-model registry: kind -> factory(sigma=..., alpha=...) -> model.
+# The built-ins live here; extensions register via register_latency_model
+# and become valid everywhere a latency kind is named (SimConfig.latency,
+# the simulate CLI, FleetSpec.latency in repro.spec) without touching any
+# of those callers.
+_LATENCY_MODELS: dict[str, "LatencyFactory"] = {
+    "deterministic": lambda *, sigma, alpha: lambda rng, m: np.ones(m),
+    "lognormal": lambda *, sigma, alpha: lambda rng, m: np.exp(
+        sigma * rng.standard_normal(m) - 0.5 * sigma * sigma),
+    # numpy's pareto returns X - 1 for Pareto(x_min=1, alpha)
+    "pareto": lambda *, sigma, alpha: lambda rng, m:
+        1.0 + rng.pareto(alpha, size=m),
+}
+
+
+def latency_model_names() -> tuple[str, ...]:
+    """Registered latency-model kinds (built-ins + extensions)."""
+    return tuple(_LATENCY_MODELS)
+
+
+def register_latency_model(kind: str, factory) -> None:
+    """Register a latency-model factory under ``kind``.
+
+    ``factory`` is called as ``factory(sigma=..., alpha=...)`` and must
+    return a ``LatencyModel`` -- a ``(rng, m) -> (m,) multiplier`` callable.
+    Re-registering a built-in name is refused so a typo cannot silently
+    change the semantics every existing config relies on.
+    """
+    if kind in _LATENCY_MODELS:
+        raise ValueError(f"latency model {kind!r} is already registered")
+    _LATENCY_MODELS[kind] = factory
+
+
 def make_latency_model(kind: str = "deterministic", *, sigma: float = 0.5,
                        alpha: float = 1.2) -> LatencyModel:
     """Per-round multiplicative compute jitter, shape (m,), >= 0."""
-    if kind == "deterministic":
-        return lambda rng, m: np.ones(m)
-    if kind == "lognormal":
-        return lambda rng, m: np.exp(
-            sigma * rng.standard_normal(m) - 0.5 * sigma * sigma)
-    if kind == "pareto":
-        # numpy's pareto returns X - 1 for Pareto(x_min=1, alpha)
-        return lambda rng, m: 1.0 + rng.pareto(alpha, size=m)
-    raise ValueError(f"unknown latency model {kind!r}")
+    factory = _LATENCY_MODELS.get(kind)
+    if factory is None:
+        raise ValueError(f"unknown latency model {kind!r}; registered: "
+                         f"{latency_model_names()}")
+    return factory(sigma=sigma, alpha=alpha)
 
 
 class AdaptiveDeadlines:

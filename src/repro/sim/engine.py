@@ -346,7 +346,10 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
     sim.state = _copy_tree(sim.state)
     H = _copy_tree(sim._H) if sim._ef else jnp.zeros((), jnp.float32)
 
-    chunk = rounds if chunk is None or chunk < 1 else min(chunk, rounds)
+    if chunk is not None and chunk < 1:
+        raise ValueError(f"chunk must be >= 1 (None = all rounds in one "
+                         f"scan); got {chunk}")
+    chunk = rounds if chunk is None else min(chunk, rounds)
     out_metrics: list[SimMetrics] = []
     w_parts: list[np.ndarray] = []
     done = 0

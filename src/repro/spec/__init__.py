@@ -1,0 +1,41 @@
+"""Declarative experiment specs: one typed config surface for the repo.
+
+The paper's four axes -- communication efficiency, computation,
+stragglers, privacy -- compose here as ONE frozen, serializable
+:class:`ExperimentSpec` (task x algorithm x fleet x policy x codec x
+engine) instead of ~25 hand-threaded CLI flags:
+
+    from repro import spec as xspec
+
+    exp = xspec.ExperimentSpec.load("examples/specs/fig7_async.toml")
+    summary = exp.build().run()
+
+    grid = xspec.sweep(exp, {"algorithm.name": ["fedepm", "sfedavg"]},
+                       seeds=[0, 1, 2])
+
+Module map: ``types`` (the dataclasses + strict dict round-trip),
+``registry`` (string-keyed extension points: algorithms, tasks, fleets,
+policies, codecs, engines), ``serialize`` (TOML/JSON files), ``build``
+(spec -> FedSim-backed RunHandle), ``sweep`` (cross-product grids).
+Schema reference and extension recipes: docs/spec.md.
+"""
+from repro.spec.build import RunHandle, build          # noqa: F401
+from repro.spec.registry import (                      # noqa: F401
+    register_algorithm,
+    register_codec,
+    register_engine,
+    register_fleet,
+    register_policy,
+    register_task,
+)
+from repro.spec.sweep import sweep                     # noqa: F401
+from repro.spec.types import (                         # noqa: F401
+    AlgorithmSpec,
+    CodecSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FleetSpec,
+    PolicySpec,
+    SpecError,
+    TaskSpec,
+)

@@ -1,0 +1,242 @@
+"""Spec -> runnable experiment: the one builder behind every entry point.
+
+``build(spec)`` materializes an :class:`~repro.spec.types.ExperimentSpec`
+into a :class:`RunHandle`: the task data, the algorithm config/state, the
+device fleet, and a configured :class:`repro.sim.FedSim` -- the same
+construction the simulate CLI's historical ``build_sim`` performed from
+argparse flags, executed through the registries so registered extensions
+build through the same path as the built-ins. Trajectories are bit-for-bit
+identical to the legacy flag path (tests/test_spec.py pins this against
+the golden NPZ).
+
+Task data is memoized per resolved :class:`TaskSpec` (bounded FIFO): two
+cells of a sweep over the same task share ONE device copy of the batches,
+which also keeps ``id(batches)`` stable so the jit caches in
+``repro.sim.server``/``repro.sim.engine`` hit across ``build()`` calls --
+a grid of sims compiles each program once, not once per cell.
+
+``RunHandle.run`` owns the execution loop both CLIs and the benchmarks
+reuse: the eager per-round path and the fused scan-chunk path (identical
+trajectories, docs/perf.md), per-round objective tracking where the
+broadcast point is a flat vector (the logreg task; LM pytrees are
+evaluated at chunk boundaries instead), and the paper's termination rule
+under ``engine.terminate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fedepm
+from repro.sim import FedSim, SimConfig, run_rounds
+from repro.sim.server import fifo_cache_get
+from repro.spec import registry
+from repro.spec.types import ExperimentSpec
+
+# task-data memo: resolved TaskSpec -> TaskData. Bounded: each entry pins
+# a full dataset on device (the same reason the sim's jit caches are
+# bounded), so a long sweep over many tasks cannot leak one per cell.
+_TASK_CACHE: dict = {}
+# jitted objective/grad-norm programs keyed by (loss_fn, batches identity);
+# stable across RunHandles because _TASK_CACHE keeps both alive
+_OBJ_CACHE: dict = {}
+
+
+def task_data(spec: ExperimentSpec) -> registry.TaskData:
+    """Materialize (memoized) the spec's task."""
+    task = spec.task
+    resolved = dataclasses.replace(
+        task, seed=task.seed if task.seed is not None else spec.seed)
+    entry = registry.TASKS[resolved.kind]
+    return fifo_cache_get(_TASK_CACHE, resolved,
+                          lambda: entry.build(resolved, resolved.seed),
+                          cap=8)
+
+
+# SimConfig's own dataclass defaults are the single source for unset
+# policy knobs (deadline=inf, overselect_factor, buffer_size, ...): an
+# all-None spec is exactly the historical CLI behaviour, and a default
+# changed in sim/server.py propagates here without a second edit
+SIM_KNOB_DEFAULTS: dict = {
+    f.name: f.default for f in dataclasses.fields(SimConfig)}
+
+
+def _sim_config(spec: ExperimentSpec) -> SimConfig:
+    """PolicySpec/FleetSpec/CodecSpec -> SimConfig, filling SimConfig's
+    own default for every unset policy knob."""
+    pol, fleet = spec.policy, spec.fleet
+    codec = registry.CODECS[spec.codec.name].build(spec.codec)
+
+    def default(knob):
+        v = getattr(pol, knob)
+        return SIM_KNOB_DEFAULTS[knob] if v is None else v
+
+    return SimConfig(
+        policy=pol.name,
+        deadline=default("deadline"),
+        overselect_factor=default("overselect_factor"),
+        latency=fleet.latency, latency_sigma=fleet.latency_sigma,
+        latency_alpha=fleet.latency_alpha, seed=spec.seed, codec=codec,
+        buffer_size=default("buffer_size"),
+        staleness_exp=default("staleness_exp"),
+        max_concurrency=default("max_concurrency"),
+        deadline_slack=default("deadline_slack"),
+        ewma_beta=default("ewma_beta"))
+
+
+def build(spec: ExperimentSpec) -> "RunHandle":
+    """Materialize a validated spec into a RunHandle."""
+    data = task_data(spec)
+    alg_entry = registry.ALGORITHMS[spec.algorithm.name]
+    cfg, state = alg_entry.build(spec.algorithm, spec.task.m, data.params0,
+                                 jax.random.PRNGKey(spec.seed))
+    fleet_seed = spec.fleet.seed if spec.fleet.seed is not None \
+        else spec.seed
+    profiles = registry.FLEETS[spec.fleet.kind].build(
+        spec.fleet, spec.task.m, fleet_seed)
+    sim = FedSim(alg=alg_entry.sim_alg, cfg=cfg, state=state,
+                 batches=data.batches, loss_fn=data.loss_fn,
+                 profiles=profiles, sim=_sim_config(spec))
+    return RunHandle(spec=spec, sim=sim, data=data)
+
+
+@dataclasses.dataclass
+class RunHandle:
+    """A built experiment: the FedSim plus the task-aware helpers every
+    driver (CLI, train launcher, benchmarks) needs around it."""
+
+    spec: ExperimentSpec
+    sim: FedSim
+    data: registry.TaskData
+
+    def __post_init__(self):
+        loss, batches = self.data.loss_fn, self.data.batches
+        key = (loss, id(batches))
+        # cap matches _TASK_CACHE's intent (2 entries per task): these
+        # closures pin the task's device batches, so a larger bound would
+        # keep evicted tasks' datasets alive behind the task memo's back
+        self._fobj = fifo_cache_get(
+            _OBJ_CACHE, ("fobj", *key),
+            lambda: jax.jit(
+                lambda w: fedepm.global_objective(loss, w, batches)),
+            cap=16)
+        self._gsq = fifo_cache_get(
+            _OBJ_CACHE, ("gsq", *key),
+            lambda: jax.jit(
+                lambda w: fedepm.global_grad_sq_norm(loss, w, batches)),
+            cap=16)
+        # per-round broadcast points can be stacked/tracked only when the
+        # parameter pytree is one flat vector (the logreg task); LM pytrees
+        # are evaluated at chunk boundaries instead
+        self._w_stackable = isinstance(self.data.params0, jax.Array)
+
+    # -- task-aware helpers --------------------------------------------------
+
+    def objective(self, w) -> jax.Array:
+        """f(w) = sum_i f_i(w) over the spec task's client batches."""
+        return self._fobj(w)
+
+    def grad_sq_norm(self, w) -> jax.Array:
+        """||grad f(w)||^2 (the termination rule's input)."""
+        return self._gsq(w)
+
+    def accuracy(self) -> float | None:
+        """Task accuracy at the current broadcast point (logreg only)."""
+        if not self.data.supports_accuracy:
+            return None
+        from repro.core.tasks import accuracy_logistic
+        return float(accuracy_logistic(
+            self.sim.state.w_tau, jnp.asarray(self.data.aux["X"]),
+            jnp.asarray(self.data.aux["y"])))
+
+    # -- the execution loop --------------------------------------------------
+
+    def _terminated(self, f_hist: list) -> bool:
+        # the paper's variance criterion fires spuriously on a flat start
+        # (abandoned rounds leave f_hist at f(w0)): require history AND at
+        # least one aggregated round before trusting it
+        if not self.spec.engine.terminate or len(f_hist) < 8:
+            return False
+        if not any(not mm.abandoned for mm in self.sim.metrics):
+            return False
+        from repro.configs.paper_logreg import termination_reached
+        return termination_reached(
+            f_hist, float(self._gsq(self.sim.state.w_tau)),
+            self.data.n_features)
+
+    def run(self, report: Callable | None = None) -> dict:
+        """Execute the spec's engine for its round budget -> summary dict.
+
+        ``report(metrics, f)`` is called once per round with that round's
+        SimMetrics and the objective at its broadcast point (None when the
+        engine cannot track per-round objectives, i.e. scan/async over an
+        LM parameter pytree). The summary is the simulate CLI's historical
+        schema -- alg/policy/engine/latency, rounds, f_final, accuracy,
+        simulated time, straggler/byte ledger totals, and the staleness
+        stats under the async policy.
+        """
+        eng = self.spec.engine
+        entry = registry.ENGINES[eng.name]
+        if entry.runner is not None:     # registered extension engine
+            return entry.runner(self, report)
+        sim = self.sim
+        f_hist: list[float] = []
+        rounds_run = 0
+        if eng.name == "eager":
+            for _ in range(eng.rounds):
+                met = sim.step()
+                rounds_run += 1
+                f_hist.append(float(self._fobj(sim.state.w_tau)))
+                if report is not None:
+                    report(met, f_hist[-1])
+                if self._terminated(f_hist):
+                    break
+        else:                            # scan: fused multi-round chunks
+            collect = self._w_stackable
+            chunk = eng.chunk if eng.chunk is not None \
+                else (8 if eng.terminate else eng.rounds)
+            while rounds_run < eng.rounds:
+                todo = min(chunk, eng.rounds - rounds_run)
+                res = run_rounds(sim, todo, collect_w_tau=collect)
+                if collect:
+                    for met, w in zip(res.metrics, res.w_tau):
+                        f_hist.append(float(self._fobj(jnp.asarray(w))))
+                        if report is not None:
+                            report(met, f_hist[-1])
+                else:
+                    for met in res.metrics:
+                        if report is not None:
+                            report(met, None)
+                rounds_run += todo
+                if self._terminated(f_hist):
+                    break
+        return self._summary(f_hist, rounds_run)
+
+    def _summary(self, f_hist: list, rounds_run: int) -> dict:
+        sim, spec = self.sim, self.spec
+        f_final = f_hist[-1] if f_hist \
+            else float(self._fobj(sim.state.w_tau))
+        summary = {
+            "spec_name": spec.name,
+            "alg": spec.algorithm.name, "policy": spec.policy.name,
+            "engine": spec.engine.name, "latency": spec.fleet.latency,
+            "rounds": rounds_run, "f_final": f_final / spec.task.m,
+            "accuracy": self.accuracy(), "sim_time_s": sim.t,
+            "stragglers_dropped": sum(mm.n_dropped for mm in sim.metrics),
+            "abandoned_rounds": sum(mm.abandoned for mm in sim.metrics),
+            "bytes_up": sim.ledger.total_up,
+            "bytes_down": sim.ledger.total_down,
+            "bytes_total": sim.ledger.total,
+            "up_bytes_per_client_round": sim.up_bytes_per_client,
+        }
+        if spec.policy.name == "async":
+            summary["staleness_max"] = max(
+                (mm.staleness_max for mm in sim.metrics), default=0)
+            summary["staleness_mean"] = float(np.mean(
+                [mm.staleness_mean for mm in sim.metrics
+                 if not mm.abandoned] or [0.0]))
+        return summary

@@ -1,0 +1,77 @@
+"""Cross-product sweep expansion over experiment specs.
+
+``sweep(base, axes, seeds=...)`` turns one base
+:class:`~repro.spec.types.ExperimentSpec` plus a mapping of dotted-path
+axes into the full grid of validated cells, the way the benchmark modules
+define their figure grids::
+
+    cells = sweep(
+        base,
+        {"algorithm.name": ["fedepm", "sfedavg"],
+         "policy": [PolicySpec(name="sync"),
+                    PolicySpec(name="deadline", deadline=0.002)]},
+        seeds=[0, 1, 2])
+
+Axis keys are either a dotted section field (``"policy.deadline"``) or a
+whole section (``"policy"``, replacing the sub-spec object). The product
+iterates in axis-insertion order with the LAST axis fastest (row-major,
+like ``itertools.product``); ``seeds`` appends a final per-cell seed axis
+setting the experiment's master ``seed``. Every cell is validated before
+the list is returned, and cell names extend the base name with
+``axis=value`` segments (plus ``s<seed>``), so a grid's JSON artifacts are
+self-describing; when a whole-section axis makes two cells share a name
+(two ``CodecSpec`` values share one ``.name``), each collision gets a
+stable ``#<ordinal>`` suffix so names stay unique.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Mapping, Sequence
+
+from repro.spec.types import ExperimentSpec, SpecError
+
+
+def _segment(path: str, value) -> str:
+    if hasattr(value, "name") and not isinstance(value, str):
+        return f"{path}={value.name}"       # a whole sub-spec: use its name
+    return f"{path}={value}"
+
+
+def sweep(base: ExperimentSpec, axes: Mapping[str, Sequence], *,
+          seeds: Sequence[int] | None = None) -> list[ExperimentSpec]:
+    """Expand ``base`` over ``axes`` (x ``seeds``) -> validated cells."""
+    for path, values in axes.items():
+        if isinstance(values, (str, bytes)) or not isinstance(
+                values, Sequence):
+            raise SpecError(f"sweep axis {path!r} must be a sequence of "
+                            f"values; got {type(values).__name__}")
+        if len(values) == 0:
+            raise SpecError(f"sweep axis {path!r} is empty")
+    combos: list[tuple[ExperimentSpec, str]] = []
+    paths = list(axes)
+    for combo in itertools.product(*(axes[p] for p in paths)):
+        spec = base
+        segments = []
+        for path, value in zip(paths, combo):
+            spec = spec.replace(**{path: value})
+            segments.append(_segment(path, value))
+        name = "/".join([base.name, *segments]) if segments else base.name
+        combos.append((spec, name))
+    # a whole-section axis can yield colliding names (two CodecSpecs share
+    # one .name); artifacts keyed by cell name must never overwrite each
+    # other, so collisions get a stable per-duplicate ordinal
+    counts: dict[str, int] = {}
+    for _, name in combos:
+        counts[name] = counts.get(name, 0) + 1
+    seen: dict[str, int] = {}
+    cells: list[ExperimentSpec] = []
+    for spec, name in combos:
+        if counts[name] > 1:
+            k = seen[name] = seen.get(name, -1) + 1
+            name = f"{name}#{k}"
+        for seed in (seeds if seeds is not None else [None]):
+            cell = spec if seed is None else spec.replace(seed=seed)
+            cell = cell.replace(
+                name=name if seed is None else f"{name}/s{seed}")
+            cells.append(cell.validate())
+    return cells

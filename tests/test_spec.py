@@ -1,0 +1,475 @@
+"""Declarative experiment-spec layer (repro.spec).
+
+Pins the four guarantees the spec API makes:
+
+  * ROUND-TRIP -- to_dict/from_dict and the TOML/JSON file forms are
+    exact inverses (idempotent re-dump), for hand-built specs and for
+    every bundled spec under examples/specs/.
+  * STRICTNESS -- unknown sections/keys, bad enum strings, wrong value
+    types, misplaced policy/algorithm knobs, and inconsistent cross-field
+    combinations all raise SpecError (never silently ignored).
+  * EQUIVALENCE -- the legacy simulate-CLI flag surface maps onto a spec
+    whose built trajectory is bit-for-bit the historical one: the bundled
+    golden spec reproduces tests/fixtures/golden_sync_trajectory.npz, and
+    a --spec file run equals the equivalent legacy-flag run under both
+    engines.
+  * TOTALITY -- any spec that passes validation builds (hypothesis rule,
+    optional as in the kernel tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = None
+
+from repro.launch import simulate
+from repro.spec import (
+    AlgorithmSpec,
+    CodecSpec,
+    EngineSpec,
+    ExperimentSpec,
+    FleetSpec,
+    PolicySpec,
+    SpecError,
+    TaskSpec,
+    sweep,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SPECS_DIR = ROOT / "examples" / "specs"
+GOLDEN_NPZ = ROOT / "tests" / "fixtures" / "golden_sync_trajectory.npz"
+TRACE_CSV = ROOT / "tests" / "fixtures" / "device_trace.csv"
+
+# a nontrivial spec touching every section (small enough to build fast)
+FULL_SPEC = ExperimentSpec(
+    name="test/full", seed=7,
+    task=TaskSpec(kind="logreg", d=600, n=14, m=8),
+    algorithm=AlgorithmSpec(name="fedepm", rho=0.5, k0=4, eps_dp=0.1,
+                            sensitivity_clip=1.0),
+    fleet=FleetSpec(kind="synthetic", latency="pareto", latency_alpha=1.4,
+                    seed=3),
+    policy=PolicySpec(name="async", buffer_size=3, max_concurrency=4,
+                      staleness_exp=0.7),
+    codec=CodecSpec(topk_frac=0.5, bits=8, error_feedback=True),
+    engine=EngineSpec(name="eager", rounds=3))
+
+
+# ---------------------------------------------------------------------------
+# round-trip
+# ---------------------------------------------------------------------------
+
+def test_dict_roundtrip_exact():
+    d = FULL_SPEC.to_dict()
+    assert ExperimentSpec.from_dict(d) == FULL_SPEC
+    # unset Optional fields are omitted, not serialized as null
+    assert "deadline" not in d["policy"]
+    assert "mu0" not in d["algorithm"]
+
+
+@pytest.mark.parametrize("ext", [".toml", ".json"])
+def test_file_roundtrip_idempotent(tmp_path, ext):
+    p1, p2 = tmp_path / f"a{ext}", tmp_path / f"b{ext}"
+    FULL_SPEC.dump(p1)
+    loaded = ExperimentSpec.load(p1)
+    assert loaded == FULL_SPEC
+    loaded.dump(p2)
+    assert p2.read_text() == p1.read_text()  # dump∘load is the identity
+
+
+def test_bundled_specs_roundtrip(tmp_path):
+    files = sorted(SPECS_DIR.glob("*.toml"))
+    assert len(files) >= 4, "bundled example specs went missing"
+    for f in files:
+        spec = ExperimentSpec.load(f)  # validates
+        out = tmp_path / f.name
+        spec.dump(out)
+        assert ExperimentSpec.load(out) == spec, f.name
+        jout = tmp_path / (f.stem + ".json")
+        spec.dump(jout)
+        assert ExperimentSpec.load(jout) == spec, f.name
+
+
+# ---------------------------------------------------------------------------
+# strictness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,msg", [
+    ({"polcy": {"name": "sync"}}, "unknown spec section"),
+    ({"policy": {"name": "sync", "bufer_size": 2}}, "unknown key"),
+    ({"policy": {"name": "sync"}, "extra": 1}, "unknown spec section"),
+    ({"task": {"d": "many"}}, "expected int"),
+    ({"task": {"d": True}}, "expected int"),
+    ({"engine": {"rounds": 2.5}}, "expected int"),
+    ({"engine": 3}, "must be a table"),
+])
+def test_from_dict_rejects(d, msg):
+    with pytest.raises(SpecError, match=msg):
+        ExperimentSpec.from_dict(d)
+
+
+@pytest.mark.parametrize("kw,msg", [
+    # bad enum strings resolve through the registries
+    ({"algorithm": AlgorithmSpec(name="sgd")}, "unknown name"),
+    ({"policy": PolicySpec(name="semisync")}, "unknown name"),
+    ({"task": TaskSpec(kind="vision")}, "unknown kind"),
+    ({"fleet": FleetSpec(latency="gamma")}, "unknown latency model"),
+    ({"engine": EngineSpec(name="turbo")}, "unknown name"),
+    ({"codec": CodecSpec(name="zip")}, "unknown name"),
+    ({"task": TaskSpec(kind="lm", arch="gpt-17")}, "unknown arch"),
+    # knob ownership: never silently ignored
+    ({"policy": PolicySpec(name="sync", buffer_size=4)}, "does not apply"),
+    ({"policy": PolicySpec(name="deadline", deadline=0.1,
+                           max_concurrency=2)}, "does not apply"),
+    ({"policy": PolicySpec(name="async", deadline=0.1)}, "does not apply"),
+    ({"algorithm": AlgorithmSpec(name="sfedavg", mu0=1.0)},
+     "does not apply"),
+    ({"algorithm": AlgorithmSpec(name="fedepm", prox_mu=1.0)},
+     "does not apply"),
+    ({"engine": EngineSpec(name="eager", chunk=4)}, "does not apply"),
+    # range rules (the CLI enforces the same ones)
+    ({"policy": PolicySpec(name="async", buffer_size=-1)}, "buffer_size"),
+    ({"policy": PolicySpec(name="async", staleness_exp=-0.5)},
+     "staleness_exp"),
+    ({"policy": PolicySpec(name="async", max_concurrency=-2)},
+     "max_concurrency"),
+    ({"policy": PolicySpec(name="deadline", deadline=-1.0)}, "deadline"),
+    ({"algorithm": AlgorithmSpec(name="fedepm", rho=0.0)}, "rho"),
+    ({"codec": CodecSpec(bits=1)}, "bits"),
+    ({"codec": CodecSpec(error_feedback=True)}, "lossy"),
+    ({"fleet": FleetSpec(availability=0.0)}, "availability"),
+    # cross-field rules
+    ({"fleet": FleetSpec(kind="trace", trace_file=str(TRACE_CSV),
+                         availability=0.5)}, "conflicts"),
+    ({"fleet": FleetSpec(kind="synthetic",
+                         trace_file=str(TRACE_CSV))}, "trace_file"),
+    ({"task": TaskSpec(kind="logreg", arch="smollm-135m")}, "lm-task"),
+    ({"task": TaskSpec(kind="lm")}, "requires arch"),
+    ({"engine": EngineSpec(name="eager", terminate=True),
+      "task": TaskSpec(kind="lm", arch="smollm-135m")}, "terminate"),
+    ({"algorithm": AlgorithmSpec(name="fedepm", sampler="coverage"),
+      "policy": PolicySpec(name="overselect")}, "uniform"),
+])
+def test_validate_rejects(kw, msg):
+    base = dataclasses.replace(FULL_SPEC, policy=PolicySpec(name="sync"),
+                               codec=CodecSpec())
+    with pytest.raises(SpecError, match=msg):
+        dataclasses.replace(base, **kw).validate()
+
+
+@pytest.mark.parametrize("argv,msg", [
+    (["--buffer-size", "-1", "--aggregation", "async"], "buffer-size"),
+    (["--max-concurrency", "-1", "--aggregation", "async"],
+     "max-concurrency"),
+    (["--staleness-exp", "-0.5", "--aggregation", "async"],
+     "staleness-exp"),
+    (["--buffer-size", "4"], "only valid with"),
+    (["--buffer-size", "0", "--aggregation", "deadline"],
+     "only valid with"),
+    (["--staleness-exp", "0.5", "--aggregation", "sync"],
+     "only valid with"),
+    (["--max-concurrency", "0", "--aggregation", "overselect"],
+     "only valid with"),
+    (["--deadline", "0.01", "--aggregation", "sync"], "does not apply"),
+])
+def test_cli_rejects(argv, msg, capsys):
+    """The CLI enforces the spec layer's knob rules: negative async knobs
+    and async-only flags under clocked policies are hard errors, not
+    silently ignored."""
+    with pytest.raises(SystemExit) as exc:
+        simulate.main(argv + ["--m", "8", "--d", "500", "--rounds", "2",
+                              "--quiet"])
+    assert exc.value.code == 2
+    assert msg in capsys.readouterr().err
+
+
+def test_cli_spec_rejects_legacy_flags(capsys):
+    """A legacy flag alongside --spec would be silently ignored, which
+    the spec layer forbids -- off-default ones are hard errors."""
+    spec_file = str(SPECS_DIR / "golden_sync.toml")
+    for extra in (["--buffer-size", "8"], ["--topk", "0.25"],
+                  ["--alg", "sfedavg"], ["--latency", "pareto"]):
+        with pytest.raises(SystemExit) as exc:
+            simulate.main(["--spec", spec_file, "--quiet"] + extra)
+        assert exc.value.code == 2
+        assert "cannot be combined with --spec" in capsys.readouterr().err
+    # the documented overrides still compose
+    assert simulate.main(["--spec", spec_file, "--quiet",
+                          "--engine", "scan", "--rounds", "1",
+                          "--seed", "1"]) == 0
+
+
+def test_cli_nonpositive_deadline_means_infinite(tmp_path):
+    """--deadline <= 0 means an infinite cutoff (the flag's documented
+    semantics), equivalent to the sync wait-for-all policy."""
+    outs = []
+    for dl in ("-1", "0"):
+        p = tmp_path / f"dl{dl}.json"
+        assert simulate.main(["--aggregation", "deadline",
+                              "--deadline", dl, "--latency", "pareto",
+                              "--m", "8", "--d", "500", "--rounds", "2",
+                              "--quiet", "--json", str(p)]) == 0
+        outs.append(json.loads(p.read_text()))
+    assert outs[0]["f_final"] == outs[1]["f_final"]
+    assert outs[0]["stragglers_dropped"] == 0
+
+
+def test_negative_seeds_rejected():
+    with pytest.raises(SpecError, match="seed"):
+        dataclasses.replace(FULL_SPEC, seed=-1).validate()
+    with pytest.raises(SpecError, match="seed"):
+        FULL_SPEC.replace(**{"fleet.seed": -2}).validate()
+    with pytest.raises(SpecError, match="seed"):
+        FULL_SPEC.replace(**{"task.seed": -3}).validate()
+
+
+# ---------------------------------------------------------------------------
+# equivalence: legacy flags <-> spec <-> golden trajectory
+# ---------------------------------------------------------------------------
+
+def test_golden_spec_matches_npz():
+    """The bundled golden spec reproduces the pinned sync trajectory:
+    state head/clock/PRNG key bit-for-bit, objective to the golden test's
+    own tolerance (its stored values were computed un-jitted)."""
+    golden = np.load(GOLDEN_NPZ)
+    handle = ExperimentSpec.load(SPECS_DIR / "golden_sync.toml").build()
+    objective, t_total, w_head = [], [], []
+    for _ in range(2):
+        handle.sim.step()
+        objective.append(float(handle.objective(handle.sim.state.w_tau)))
+        t_total.append(handle.sim.t)
+        w_head.append(np.asarray(handle.sim.state.w_tau[:8]))
+    np.testing.assert_allclose(objective, golden["objective"], rtol=1e-6)
+    np.testing.assert_array_equal(t_total, golden["t_total"])
+    np.testing.assert_allclose(np.stack(w_head), golden["w_tau_head"],
+                               rtol=0, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(handle.sim.state.key),
+                                  golden["key_final"])
+    assert int(handle.sim.state.k) == int(golden["k_final"])
+
+
+def test_legacy_flags_equal_spec_file(tmp_path):
+    """One scenario, three surfaces -- legacy flags, the mapped
+    ExperimentSpec dumped to TOML and run via --spec, and --spec under the
+    scan engine -- produce the same summary."""
+    argv = ["--alg", "fedepm", "--aggregation", "deadline",
+            "--deadline", "0.002", "--latency", "pareto",
+            "--m", "8", "--d", "600", "--rounds", "4", "--seed", "3"]
+    legacy_json = tmp_path / "legacy.json"
+    assert simulate.main(argv + ["--quiet", "--json",
+                                 str(legacy_json)]) == 0
+
+    import argparse
+    args = argparse.Namespace(
+        alg="fedepm", aggregation="deadline", deadline=0.002,
+        latency="pareto", m=8, d=600, n=14, rounds=4, seed=3,
+        rho=0.5, k0=8, eps=0.0, topk=1.0, bits=0, error_feedback=False,
+        quant_impl="ref", engine="eager", terminate=False,
+        overselect=1.5, deadline_slack=2.0, ewma_beta=0.3,
+        buffer_size=None, staleness_exp=None, max_concurrency=None,
+        latency_sigma=0.5, latency_alpha=1.2, availability=1.0,
+        trace_file=None)
+    spec = simulate.spec_from_args(args).validate()
+    spec_file = tmp_path / "cell.toml"
+    spec.dump(spec_file)
+
+    outs = {}
+    for tag, extra in (("spec_eager", []), ("spec_scan",
+                                            ["--engine", "scan"])):
+        p = tmp_path / f"{tag}.json"
+        assert simulate.main(["--spec", str(spec_file), "--quiet",
+                              "--json", str(p)] + extra) == 0
+        outs[tag] = json.loads(p.read_text())
+
+    legacy = json.loads(legacy_json.read_text())
+    for tag, got in outs.items():
+        assert got.pop("engine") in ("eager", "scan")
+        ref = dict(legacy)
+        ref.pop("engine")
+        ref["spec_name"] = got["spec_name"]
+        assert got == ref, tag
+
+
+def test_spec_from_args_maps_all_policies():
+    """Every policy's owned knobs land on the PolicySpec; everything else
+    stays unset."""
+    base = dict(alg="fedepm", latency="deterministic", m=8, d=500, n=14,
+                rounds=2, seed=0, rho=0.5, k0=8, eps=0.0, topk=1.0,
+                bits=0, error_feedback=False, quant_impl="ref",
+                engine="eager", terminate=False, deadline=0.0,
+                overselect=1.5, deadline_slack=2.0, ewma_beta=0.3,
+                buffer_size=None, staleness_exp=None, max_concurrency=None,
+                latency_sigma=0.5, latency_alpha=1.2, availability=1.0,
+                trace_file=None)
+    import argparse
+    mk = lambda **kw: argparse.Namespace(**{**base, **kw})  # noqa: E731
+
+    s = simulate.spec_from_args(mk(aggregation="sync"))
+    assert s.policy == PolicySpec(name="sync")
+    s = simulate.spec_from_args(mk(aggregation="deadline", deadline=0.01))
+    assert s.policy == PolicySpec(name="deadline", deadline=0.01)
+    s = simulate.spec_from_args(mk(aggregation="deadline"))  # infinite
+    assert s.policy == PolicySpec(name="deadline")
+    s = simulate.spec_from_args(mk(aggregation="adaptive",
+                                   deadline_slack=3.0))
+    assert s.policy == PolicySpec(name="adaptive", deadline_slack=3.0,
+                                  ewma_beta=0.3)
+    s = simulate.spec_from_args(mk(aggregation="async", buffer_size=4,
+                                   max_concurrency=2))
+    assert s.policy == PolicySpec(name="async", buffer_size=4,
+                                  max_concurrency=2)
+    s = simulate.spec_from_args(mk(aggregation="overselect"))
+    assert s.policy == PolicySpec(name="overselect", overselect_factor=1.5)
+    # validated mapping round-trips through files too
+    s.validate()
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+
+def test_sweep_cross_product_and_seeds():
+    base = dataclasses.replace(
+        FULL_SPEC, policy=PolicySpec(name="sync"), codec=CodecSpec(),
+        algorithm=AlgorithmSpec(name="fedepm", rho=0.5, k0=4))
+    cells = sweep(base,
+                  {"algorithm.name": ["fedepm", "sfedavg"],
+                   "policy": [PolicySpec(name="sync"),
+                              PolicySpec(name="deadline", deadline=0.01)]},
+                  seeds=[0, 1, 2])
+    assert len(cells) == 2 * 2 * 3
+    assert len({c.name for c in cells}) == len(cells)  # self-describing
+    assert {c.seed for c in cells} == {0, 1, 2}
+    # last axis fastest, seeds innermost
+    assert cells[0].algorithm.name == "fedepm"
+    assert cells[0].policy.name == "sync" and cells[0].seed == 0
+    assert cells[1].seed == 1
+    assert cells[3].policy.name == "deadline"
+    assert cells[6].algorithm.name == "sfedavg"
+    assert cells[-1].policy.name == "deadline"
+    # every cell came back validated; a sweep injecting an invalid value
+    # fails loudly
+    with pytest.raises(SpecError):
+        sweep(base, {"policy.buffer_size": [4]})
+    with pytest.raises(SpecError, match="empty"):
+        sweep(base, {"algorithm.name": []})
+
+
+def test_replace_dotted_paths():
+    s = FULL_SPEC.replace(**{"policy.buffer_size": 5, "seed": 9})
+    assert s.policy.buffer_size == 5 and s.seed == 9
+    assert FULL_SPEC.policy.buffer_size == 3  # frozen original untouched
+    with pytest.raises(SpecError, match="unknown spec section"):
+        FULL_SPEC.replace(**{"polcy.buffer_size": 5})
+    # misspelled FIELD names are SpecError too, never a raw TypeError
+    with pytest.raises(SpecError, match="unknown field"):
+        FULL_SPEC.replace(**{"policy.bufer_size": 5})
+    with pytest.raises(SpecError, match="unknown spec field"):
+        FULL_SPEC.replace(sed=9)
+
+
+def test_sweep_section_axis_names_stay_unique():
+    """Two sub-spec axis values sharing one .name (e.g. two topk_quant
+    CodecSpecs) must not collide in cell names -- artifacts keyed by name
+    would silently overwrite each other."""
+    base = dataclasses.replace(
+        FULL_SPEC, policy=PolicySpec(name="sync"), codec=CodecSpec(),
+        algorithm=AlgorithmSpec(name="fedepm", rho=0.5, k0=4))
+    cells = sweep(base, {"codec": [CodecSpec(topk_frac=0.5, bits=8),
+                                   CodecSpec(topk_frac=0.25, bits=8)]})
+    assert len({c.name for c in cells}) == 2
+    assert cells[0].codec.topk_frac == 0.5
+    assert cells[1].codec.topk_frac == 0.25
+
+
+def test_train_spec_rejects_mesh_flags(capsys):
+    """train.py --spec enforces the same no-silently-ignored-flags rule
+    as simulate.py for the mesh-path flags."""
+    from repro.launch import train
+    spec_file = str(SPECS_DIR / "lm_federated.toml")
+    with pytest.raises(SystemExit) as exc:
+        train.main(["--spec", spec_file, "--devices", "8"])
+    assert exc.value.code == 2
+    assert "cannot be combined with --spec" in capsys.readouterr().err
+    with pytest.raises(SystemExit) as exc:
+        train.main(["--spec", spec_file, "--arch", "xlstm-125m"])
+    assert exc.value.code == 2
+
+
+def test_sim_knob_defaults_track_simconfig():
+    """The builder's unset-knob fallbacks are SimConfig's own dataclass
+    defaults -- one source of truth (a default changed in sim/server.py
+    propagates to spec-built runs and the CLI's unset test)."""
+    import dataclasses as dc
+
+    from repro.sim import SimConfig
+    from repro.spec.build import SIM_KNOB_DEFAULTS
+    assert SIM_KNOB_DEFAULTS == {
+        f.name: f.default for f in dc.fields(SimConfig)}
+    assert simulate._KNOB_DEFAULTS["overselect"] \
+        == SIM_KNOB_DEFAULTS["overselect_factor"]
+
+
+# ---------------------------------------------------------------------------
+# totality: any valid spec builds (hypothesis; optional like the kernel
+# property tests)
+# ---------------------------------------------------------------------------
+
+if hypothesis is not None:
+    _spec_strategy = st.builds(
+        ExperimentSpec,
+        seed=st.integers(0, 3),
+        task=st.just(TaskSpec(kind="logreg", d=200, n=14, m=6)),
+        algorithm=st.builds(
+            AlgorithmSpec,
+            name=st.sampled_from(["fedepm", "sfedavg", "sfedprox"]),
+            rho=st.sampled_from([0.34, 0.5, 1.0]),
+            k0=st.integers(1, 3),
+            eps_dp=st.sampled_from([0.0, 0.5])),
+        fleet=st.builds(
+            FleetSpec,
+            kind=st.sampled_from(["synthetic", "uniform"]),
+            latency=st.sampled_from(["deterministic", "lognormal",
+                                     "pareto"])),
+        policy=st.one_of(
+            st.just(PolicySpec(name="sync")),
+            st.builds(PolicySpec, name=st.just("deadline"),
+                      deadline=st.sampled_from([0.001, 1.0])),
+            st.builds(PolicySpec, name=st.just("adaptive"),
+                      deadline_slack=st.sampled_from([1.5, 3.0])),
+            st.builds(PolicySpec, name=st.just("async"),
+                      buffer_size=st.integers(0, 3),
+                      max_concurrency=st.integers(0, 4))),
+        codec=st.one_of(
+            st.just(CodecSpec()),
+            st.builds(CodecSpec, topk_frac=st.sampled_from([0.5, 1.0]),
+                      bits=st.sampled_from([0, 4, 8]),
+                      error_feedback=st.booleans())),
+        engine=st.builds(EngineSpec,
+                         name=st.sampled_from(["eager", "scan"]),
+                         rounds=st.integers(1, 2)))
+
+    @hypothesis.settings(deadline=None, max_examples=25,
+                         suppress_health_check=[
+                             hypothesis.HealthCheck.too_slow])
+    @hypothesis.given(spec=_spec_strategy)
+    def test_any_valid_spec_builds(spec):
+        """Hypothesis rule: a spec that passes validate() always builds
+        (and the round-trip of that spec is exact). Invalid combinations
+        the strategy can generate (EF without lossy codec) must be
+        rejected by the same gate -- never fail later in the builder."""
+        try:
+            spec.validate()
+        except SpecError:
+            return  # rejected up front is fine; building must not crash
+        handle = spec.build()
+        assert handle.sim.cfg.m == spec.task.m
+        assert ExperimentSpec.from_dict(spec.to_dict()) == spec

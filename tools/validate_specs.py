@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Validate + round-trip every bundled experiment spec (CI `spec` job).
+
+For each ``examples/specs/*.toml``: load (strict parse + full validation),
+re-dump to TOML and JSON in a scratch dir, reload both, and require
+dataclass equality with the original plus byte-identical TOML re-dump
+(dump∘load idempotence). Exit 1 listing every failing file.
+
+Usage: PYTHONPATH=src python tools/validate_specs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import tempfile
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SPECS = ROOT / "examples" / "specs"
+
+
+def main() -> int:
+    from repro.spec import ExperimentSpec, SpecError
+
+    files = sorted(SPECS.glob("*.toml"))
+    if not files:
+        print(f"FAIL: no bundled specs under {SPECS}")
+        return 1
+    errors = []
+    with tempfile.TemporaryDirectory() as td:
+        scratch = pathlib.Path(td)
+        for f in files:
+            try:
+                spec = ExperimentSpec.load(f)
+                toml_copy = scratch / f.name
+                spec.dump(toml_copy)
+                if ExperimentSpec.load(toml_copy) != spec:
+                    raise SpecError("TOML round-trip changed the spec")
+                spec.dump(scratch / ("rt_" + f.name))
+                if (scratch / ("rt_" + f.name)).read_text() \
+                        != toml_copy.read_text():
+                    raise SpecError("TOML re-dump is not idempotent")
+                json_copy = scratch / (f.stem + ".json")
+                spec.dump(json_copy)
+                if ExperimentSpec.load(json_copy) != spec:
+                    raise SpecError("JSON round-trip changed the spec")
+            except SpecError as e:
+                errors.append(f"{f.relative_to(ROOT)}: {e}")
+            else:
+                print(f"ok: {f.relative_to(ROOT)} ({spec.name})")
+    if errors:
+        print(f"\n{len(errors)} spec(s) FAILED:")
+        for e in errors:
+            print(" ", e)
+        return 1
+    print(f"\nall {len(files)} bundled specs validate + round-trip")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
