@@ -177,6 +177,31 @@ def run(**kw) -> list:
     return rows_from(bench(**kw))
 
 
+def export_trace(trace_out, *, jax_profile_dir=None, d: int = 4000,
+                 m: int = 50, k0: int = 8, rho: float = 0.5, n: int = 14,
+                 rounds: int = 60, seed: int = 0, **_ignored) -> dict:
+    """Run the benchmark's scan cell with telemetry and export the timeline.
+
+    One scan-engine run of the benchmark scenario with the event recorder
+    attached: the simulated timeline goes to ``trace_out`` (Perfetto
+    trace_event JSON), and ``jax_profile_dir`` additionally wraps the run
+    in ``jax.profiler`` for a REAL wall-time trace of the fused scan --
+    the artifact to look at when the speedup number regresses.
+    """
+    spec = xspec.ExperimentSpec(
+        name="bench-engine/scan-trace", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0),
+        fleet=xspec.FleetSpec(kind="uniform"),
+        policy=xspec.PolicySpec(name="sync"),
+        engine=xspec.EngineSpec(name="scan", rounds=rounds),
+        telemetry=xspec.TelemetrySpec(
+            enabled=True, trace_out=str(trace_out),
+            jax_profiler_dir=str(jax_profile_dir) if jax_profile_dir
+            else None))
+    return spec.build().run()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Fused scan engine vs eager dispatch benchmark")
@@ -187,6 +212,12 @@ def main(argv=None):
     ap.add_argument("--json", default=None,
                     help="write the summary dict (BENCH_engine.json schema) "
                          "to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Perfetto trace_event JSON timeline of "
+                         "one scan-engine run of the benchmark cell")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="with --trace-out: wrap that run in jax.profiler "
+                         "for a real wall-time trace under DIR")
     args = ap.parse_args(argv)
     kw = QUICK_KW if args.quick else (dict(d=45222) if args.full else {})
     summary = bench(**kw)
@@ -195,6 +226,9 @@ def main(argv=None):
     if args.json:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=1)
+    if args.trace_out:
+        export_trace(args.trace_out, jax_profile_dir=args.jax_profile, **kw)
+        print(f"engine/trace_out,{args.trace_out}", file=sys.stderr)
     return 0
 
 

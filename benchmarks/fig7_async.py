@@ -37,6 +37,12 @@ Rows: fig7/<policy>/time_to_target,<sim_seconds * 1e6>,<derived>
       fig7/codec/gap_{memoryless,error_feedback},<|f - f_raw|>
       fig7/trace/<alg>/time_to_target,<sim_seconds * 1e6>,<derived>
       fig7/trace/<alg>/speedup_vs_sync,<factor>
+
+``--trace-out PATH`` additionally runs the async cell with run telemetry
+attached and exports the simulated timeline as a Perfetto/Chrome
+``trace_event`` JSON (one track per client; docs/observability.md) --
+the straggler/staleness structure the race rows summarize, visible in
+ui.perfetto.dev. ``--events-out`` writes the raw event JSONL.
 """
 from __future__ import annotations
 
@@ -220,6 +226,33 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
     return rows
 
 
+def export_trace(trace_out, events_out=None, *, d: int = 4000, m: int = 32,
+                 k0: int = 8, rho: float = 0.5, rounds: int = 60,
+                 n: int = 14, seed: int = 0, alpha: float = 1.2) -> dict:
+    """Run the fig7 async cell with telemetry and export its timeline.
+
+    One buffered-async run (buffer = cohort/2, concurrency cap = cohort/2
+    -- the cap is what makes the stalled-dispatch FIFO visible in the
+    counter track) on the Pareto fleet; writes the Perfetto trace to
+    ``trace_out`` (and the event JSONL to ``events_out`` if given) and
+    returns the run summary.
+    """
+    cohort = max(1, round(rho * m))
+    buffer_k = max(1, cohort // 2)
+    spec = xspec.ExperimentSpec(
+        name="fig7/async-trace", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0),
+        fleet=xspec.FleetSpec(latency="pareto", latency_alpha=alpha),
+        policy=xspec.PolicySpec(name="async", buffer_size=buffer_k,
+                                max_concurrency=buffer_k),
+        engine=xspec.EngineSpec(name="eager", rounds=rounds),
+        telemetry=xspec.TelemetrySpec(
+            enabled=True, trace_out=str(trace_out),
+            events_jsonl=str(events_out) if events_out else None))
+    return spec.build().run()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Fig. 7: async client-level aggregation benchmarks")
@@ -227,14 +260,24 @@ def main(argv=None):
                     help="reduced task + short round budget (CI smoke)")
     ap.add_argument("--json", default=None,
                     help="also write rows as JSON records to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Perfetto trace_event JSON timeline of "
+                         "the async cell (one track per client)")
+    ap.add_argument("--events-out", default=None,
+                    help="with --trace-out: also write the raw telemetry "
+                         "event stream as JSONL")
     args = ap.parse_args(argv)
-    rows = run(**(QUICK_KW if args.quick else {}))
+    kw = QUICK_KW if args.quick else {}
+    rows = run(**kw)
     for r in rows:
         print(",".join(map(str, r)))
     if args.json:
         with open(args.json, "w") as f:
             json.dump([{"name": a, "value": b, "derived": c}
                        for a, b, c in rows], f, indent=1)
+    if args.trace_out:
+        export_trace(args.trace_out, args.events_out, **kw)
+        print(f"fig7/trace_out,{args.trace_out}", file=sys.stderr)
     return 0
 
 

@@ -139,12 +139,30 @@ def spec_from_args(args) -> ExperimentSpec:
                           terminate=args.terminate))
 
 
+def _telemetry_overrides(args) -> dict:
+    """--telemetry/--events-out/--trace-out/--jax-profile -> dotted spec
+    overrides. Any sink flag implies telemetry.enabled (a sink without a
+    recorder would be a guaranteed validation error)."""
+    overrides = {}
+    if args.events_out:
+        overrides["telemetry.events_jsonl"] = args.events_out
+    if args.trace_out:
+        overrides["telemetry.trace_out"] = args.trace_out
+    if args.jax_profile:
+        overrides["telemetry.jax_profiler_dir"] = args.jax_profile
+    if args.telemetry or overrides:
+        overrides["telemetry.enabled"] = True
+    return overrides
+
+
 def resolve_spec(args) -> ExperimentSpec:
     """--spec file (plus explicit overrides) or the legacy-flag mapping."""
     if not args.spec:
-        return spec_from_args(args).validate()
+        exp = spec_from_args(args)
+        overrides = _telemetry_overrides(args)
+        return (exp.replace(**overrides) if overrides else exp).validate()
     exp = ExperimentSpec.load(args.spec)
-    overrides = {}
+    overrides = _telemetry_overrides(args)
     if args.engine_flag is not None:
         overrides["engine.name"] = args.engine_flag
     if args.rounds_flag is not None:
@@ -189,8 +207,9 @@ def main(argv=None):
     ap.add_argument("--spec", default=None,
                     help="ExperimentSpec file (.toml/.json, docs/spec.md); "
                          "replaces the legacy flags below -- only "
-                         "--engine/--rounds/--terminate/--seed override "
-                         "the file, plus --quiet/--json")
+                         "--engine/--rounds/--terminate/--seed and the "
+                         "telemetry flags override the file, plus "
+                         "--quiet/--json")
     ap.add_argument("--alg", default="fedepm",
                     choices=["fedepm", "sfedavg", "sfedprox"])
     ap.add_argument("--aggregation", "--policy", dest="aggregation",
@@ -271,6 +290,23 @@ def main(argv=None):
     ap.add_argument("--terminate", dest="terminate_flag",
                     action="store_true",
                     help="stop at the paper's termination rule")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="attach the run-telemetry recorder (events + "
+                         "metrics; docs/observability.md). The trajectory "
+                         "is bit-for-bit unchanged; the summary gains a "
+                         "'telemetry' block. Implied by any sink flag "
+                         "below. Composes with --spec")
+    ap.add_argument("--events-out", default=None,
+                    help="telemetry sink: write the event stream as JSONL "
+                         "(one event per line; implies --telemetry)")
+    ap.add_argument("--trace-out", default=None,
+                    help="telemetry sink: write a Perfetto/Chrome "
+                         "trace_event JSON of the simulated timeline -- "
+                         "one track per client -- loadable in "
+                         "ui.perfetto.dev (implies --telemetry)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="wrap the run in jax.profiler for a real "
+                         "wall-time trace under DIR (implies --telemetry)")
     ap.add_argument("--quiet", action="store_true")
     ap.add_argument("--json", default=None,
                     help="write the summary dict to this path")

@@ -68,7 +68,8 @@ import numpy as np
 from repro.core import baselines, fedepm, participation
 from repro.core.treeutil import tmap, tree_where, tree_where_client
 from repro.sim import clients as simclients
-from repro.sim.server import FedSim, SimMetrics, fifo_cache_get
+from repro.sim.server import (FedSim, SimMetrics, emit_clocked_round_events,
+                              fifo_cache_get, make_sim_metrics)
 from repro.sim.transport import codec_roundtrip, ef_roundtrip
 
 _SCAN_POLICIES = ("sync", "deadline", "adaptive", "overselect")
@@ -396,17 +397,27 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
             sim.last_round_metrics = tmap(
                 lambda y: y[int(live[-1])], rm_stack)
         for t in range(C):
+            dur = float(durs[t])
+            # the scan path reconstructs the SAME event stream the eager
+            # driver emits: same helper, same already-computed host arrays
+            if sim.telemetry.enabled:
+                emit_clocked_round_events(
+                    sim.telemetry, policy=sim.sim.policy,
+                    round_idx=sim.round_idx, t0=sim.t,
+                    candidates=cands[t], arrivals=arrivals[t],
+                    mask=masks[t], dur=dur, rec_up=rec_ups[t],
+                    abandoned=bool(abandoned[t]), codec=sim.sim.codec,
+                    up_bytes=sim._up_bytes)
             brec = sim.ledger.record_round(
                 down_mask=cands[t], up_mask=rec_ups[t],
-                down_bytes=sim._down_bytes, up_bytes=sim._up_bytes)
-            sim.t += float(durs[t])
-            n_cont = int(cands[t].sum())
-            n_agg = int(masks[t].sum())
-            m = SimMetrics(
-                round_idx=sim.round_idx, t_round=float(durs[t]),
-                t_total=sim.t, n_contacted=n_cont, n_aggregated=n_agg,
-                n_dropped=n_cont - n_agg, bytes_down=brec["down"],
-                bytes_up=brec["up"], abandoned=bool(abandoned[t]))
+                down_bytes=sim._down_bytes, up_bytes=sim._up_bytes,
+                ts=sim.t + dur, round_idx=sim.round_idx)
+            sim.t += dur
+            m = make_sim_metrics(
+                round_idx=sim.round_idx, t_round=dur, t_total=sim.t,
+                n_contacted=int(cands[t].sum()),
+                n_aggregated=int(masks[t].sum()), brec=brec,
+                abandoned=bool(abandoned[t]))
             sim.metrics.append(m)
             out_metrics.append(m)
             sim.round_idx += 1

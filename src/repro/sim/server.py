@@ -102,11 +102,13 @@ from repro.sim import clients as simclients
 from repro.sim.transport import (
     ByteLedger,
     CodecConfig,
+    codec_event_attrs,
     codec_roundtrip,
     ef_roundtrip,
     encoded_client_bytes,
     tree_client_bytes,
 )
+from repro.telemetry.events import NULL_RECORDER
 
 _POLICIES = ("sync", "deadline", "adaptive", "overselect", "async")
 
@@ -149,6 +151,74 @@ class SimMetrics(NamedTuple):
     abandoned: bool      # nobody reported before the cutoff
     staleness_mean: float = 0.0  # async: mean versions-behind of the merge
     staleness_max: int = 0       # async: worst versions-behind of the merge
+
+
+def make_sim_metrics(*, round_idx: int, t_round: float, t_total: float,
+                     n_contacted: int, n_aggregated: int, brec: dict,
+                     abandoned: bool, staleness=(),
+                     n_dropped: int | None = None) -> SimMetrics:
+    """The ONE SimMetrics constructor both engines use.
+
+    The eager server and the scan engine's host bookkeeping loop build
+    their per-round metrics through this helper, so the two paths cannot
+    drift apart field-by-field (tests/test_engine.py pins schema equality).
+    ``brec`` is the ByteLedger record of the round; ``staleness`` the
+    per-merged-contribution versions-behind sequence (clocked rounds merge
+    at staleness 0 and pass the default).
+    """
+    staleness = list(staleness)
+    return SimMetrics(
+        round_idx=round_idx, t_round=t_round, t_total=t_total,
+        n_contacted=int(n_contacted), n_aggregated=int(n_aggregated),
+        n_dropped=int(n_contacted) - int(n_aggregated)
+        if n_dropped is None else int(n_dropped),
+        bytes_down=brec["down"], bytes_up=brec["up"],
+        abandoned=bool(abandoned),
+        staleness_mean=float(np.mean(staleness)) if staleness else 0.0,
+        staleness_max=int(max(staleness)) if staleness else 0)
+
+
+def emit_clocked_round_events(rec, *, policy: str, round_idx: int,
+                              t0: float, candidates: np.ndarray,
+                              arrivals: np.ndarray, mask: np.ndarray,
+                              dur: float, rec_up: np.ndarray,
+                              abandoned: bool,
+                              codec: CodecConfig | None,
+                              up_bytes: float) -> None:
+    """Emit one clocked round's telemetry events (sync/deadline/adaptive/
+    overselect; policy="async" has its own event-loop instrumentation).
+
+    Called with the round's already-computed host arrays by BOTH the eager
+    server and the scan engine's bookkeeping loop -- the same inputs
+    produce the same stream, which is what makes eager and scan runs
+    comparable event-for-event (tests/test_telemetry.py pins it).
+    Timestamps: dispatches at the round's start ``t0``, each upload at
+    ``t0 + min(arrival, dur)`` (a straggler's upload is cut at the round
+    end), merge/abandon at ``t0 + dur``.
+    """
+    rec.event("round_start", ts=t0, round_idx=round_idx, policy=policy)
+    for i in np.flatnonzero(candidates):
+        a = float(arrivals[i])
+        if math.isfinite(a):
+            rec.event("dispatch", ts=t0, round_idx=round_idx, client=int(i),
+                      arrival_s=a)
+        else:
+            rec.event("dispatch", ts=t0, round_idx=round_idx, client=int(i),
+                      live=False)
+    for i in np.flatnonzero(rec_up):
+        rec.event("upload_arrival", ts=t0 + min(float(arrivals[i]), dur),
+                  round_idx=round_idx, client=int(i))
+    t_end = t0 + dur
+    if abandoned:
+        rec.event("abandon", ts=t_end, round_idx=round_idx,
+                  n_contacted=int(candidates.sum()))
+        return
+    n_agg = int(mask.sum())
+    if codec is not None and n_agg:
+        rec.event("codec_encode", ts=t_end, round_idx=round_idx,
+                  **codec_event_attrs(codec, n_clients=n_agg,
+                                      up_bytes=up_bytes))
+    rec.event("merge", ts=t_end, round_idx=round_idx, n=n_agg, t_round=dur)
 
 
 @dataclasses.dataclass
@@ -299,12 +369,16 @@ class FedSim:
     profiles : device heterogeneity (clients.make_profiles); default uniform.
     sim : SimConfig policy/latency/codec settings.
     work_flops : override the per-round client compute estimate.
+    telemetry : an EventRecorder (repro.telemetry), or None for the shared
+        no-op NULL_RECORDER. Recording is observational only -- it never
+        draws RNG or dispatches jit work, so trajectories are bit-for-bit
+        independent of it.
     """
 
     def __init__(self, *, alg: str, cfg: Any, state: Any, batches: Any,
                  loss_fn: Callable, profiles=None,
                  sim: SimConfig = SimConfig(),
-                 work_flops: float | None = None):
+                 work_flops: float | None = None, telemetry=None):
         if alg not in _ALGS:
             raise ValueError(f"unknown alg {alg!r}")
         if sim.policy not in _POLICIES:
@@ -385,7 +459,8 @@ class FedSim:
         # byte model from the real state trees
         self._down_bytes = float(tree_client_bytes(state.w_tau))
         self._up_bytes = float(encoded_client_bytes(state.Z, sim.codec))
-        self.ledger = ByteLedger(cfg.m)
+        self.telemetry = NULL_RECORDER if telemetry is None else telemetry
+        self.ledger = ByteLedger(cfg.m, telemetry=self.telemetry)
 
         # error-feedback codec memory: the reconstruction h_i both sides
         # hold after client i's last DELIVERED upload (init: zeros, i.e.
@@ -447,6 +522,11 @@ class FedSim:
         self.round_idx = 0
         self.metrics: list[SimMetrics] = []
         self.last_round_metrics = None  # algorithm RoundMetrics of last round
+
+    def attach_telemetry(self, recorder) -> None:
+        """Point the sim (and its byte ledger) at a telemetry recorder."""
+        self.telemetry = recorder
+        self.ledger.telemetry = recorder
 
     @property
     def up_bytes_per_client(self) -> float:
@@ -573,17 +653,22 @@ class FedSim:
                 # cut_i, so only kept uploads were actually received
                 rec_up = mask
 
+        if self.telemetry.enabled:
+            emit_clocked_round_events(
+                self.telemetry, policy=self.sim.policy,
+                round_idx=self.round_idx, t0=self.t, candidates=candidates,
+                arrivals=arrivals, mask=mask, dur=dur, rec_up=rec_up,
+                abandoned=bool(abandoned), codec=self.sim.codec,
+                up_bytes=self._up_bytes)
         brec = self.ledger.record_round(
             down_mask=candidates, up_mask=rec_up,
-            down_bytes=self._down_bytes, up_bytes=self._up_bytes)
+            down_bytes=self._down_bytes, up_bytes=self._up_bytes,
+            ts=self.t + dur, round_idx=self.round_idx)
         self.t += dur
-        m = SimMetrics(
+        m = make_sim_metrics(
             round_idx=self.round_idx, t_round=dur, t_total=self.t,
-            n_contacted=int(candidates.sum()),
-            n_aggregated=int(mask.sum()),
-            n_dropped=int(candidates.sum()) - int(mask.sum()),
-            bytes_down=brec["down"], bytes_up=brec["up"],
-            abandoned=bool(abandoned))
+            n_contacted=int(candidates.sum()), n_aggregated=int(mask.sum()),
+            brec=brec, abandoned=bool(abandoned))
         self.metrics.append(m)
         self.round_idx += 1
         return m
@@ -620,6 +705,11 @@ class FedSim:
         self._ev_contacted += int(offline.sum())
         self._ev_dropped += int(offline.sum())
         self._ev_down += offline.astype(np.int64)
+        if self.telemetry.enabled:
+            for i in np.flatnonzero(offline):
+                self.telemetry.event("dispatch", ts=self.t,
+                                     round_idx=self.round_idx,
+                                     client=int(i), live=False)
         live_idx = np.flatnonzero(live)
         if live_idx.size:
             base = self._eseq
@@ -670,6 +760,13 @@ class FedSim:
             w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
         self.last_round_metrics = rmetrics
         self._n_inflight += len(group)
+        if self.telemetry.enabled:
+            for i, dur in group:
+                self.telemetry.event(
+                    "dispatch", ts=self.t, round_idx=self.round_idx,
+                    client=int(i), dur_s=float(dur), version=self._version,
+                    in_flight=self._n_inflight,
+                    stalled=len(self._stalled))
         # one gather per leaf for the whole group's upload/iterate rows
         # (vs 2 slice ops per CLIENT); indices pad to the next power of two
         # (repeating the last) so _merge_contribution compiles per pow2
@@ -708,6 +805,10 @@ class FedSim:
         self._ev_up = np.zeros(self.cfg.m, np.int64)
         self._ev_contacted = 0
         self._ev_dropped = 0
+        if self.telemetry.enabled:
+            self.telemetry.event("round_start", ts=self.t,
+                                 round_idx=self.round_idx, policy="async",
+                                 version=self._version)
         if self._in_system() < self._cohort:
             self._select_cohort()
         buffer: list[_Contribution] = []
@@ -747,6 +848,12 @@ class FedSim:
             self._n_inflight -= 1
             self._ev_up[c.client] += 1
             buffer.append(c)
+            if self.telemetry.enabled:
+                self.telemetry.event(
+                    "upload_arrival", ts=self.t, round_idx=self.round_idx,
+                    client=int(c.client), version=c.version,
+                    in_flight=self._n_inflight,
+                    stalled=len(self._stalled))
 
         staleness = [self._version - c.version for c in buffer]
         for c, s in zip(buffer, staleness):
@@ -760,20 +867,33 @@ class FedSim:
                 codec=self.sim.codec, ef=self._ef)
             self.state = self.state._replace(Z=Z, W=W)
             self._H = H
+            if self.telemetry.enabled:
+                if self.sim.codec is not None:
+                    self.telemetry.event(
+                        "codec_encode", ts=self.t, round_idx=self.round_idx,
+                        client=int(c.client),
+                        **codec_event_attrs(self.sim.codec, n_clients=1,
+                                            up_bytes=self._up_bytes))
+                self.telemetry.event(
+                    "merge", ts=self.t, round_idx=self.round_idx,
+                    client=int(c.client), staleness=int(s),
+                    gamma=float(gamma))
         if buffer:
             self._version += 1
+        elif self.telemetry.enabled:
+            self.telemetry.event("abandon", ts=self.t,
+                                 round_idx=self.round_idx,
+                                 n_contacted=self._ev_contacted)
 
         brec = self.ledger.record_counts(
             down_counts=self._ev_down, up_counts=self._ev_up,
-            down_bytes=self._down_bytes, up_bytes=self._up_bytes)
-        m = SimMetrics(
+            down_bytes=self._down_bytes, up_bytes=self._up_bytes,
+            ts=self.t, round_idx=self.round_idx)
+        m = make_sim_metrics(
             round_idx=self.round_idx, t_round=self.t - t_start,
             t_total=self.t, n_contacted=self._ev_contacted,
             n_aggregated=len(buffer), n_dropped=self._ev_dropped,
-            bytes_down=brec["down"], bytes_up=brec["up"],
-            abandoned=not buffer,
-            staleness_mean=float(np.mean(staleness)) if staleness else 0.0,
-            staleness_max=int(max(staleness)) if staleness else 0)
+            brec=brec, abandoned=not buffer, staleness=staleness)
         self.metrics.append(m)
         self.round_idx += 1
         return m

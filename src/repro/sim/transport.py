@@ -62,12 +62,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.quant import ops as quant_ops
+from repro.telemetry.events import NULL_RECORDER
 
 tmap = jax.tree_util.tree_map
 
@@ -171,6 +173,36 @@ def encoded_client_bytes(tree, codec: CodecConfig | None) -> float:
     return total
 
 
+def codec_event_attrs(codec: CodecConfig, *, n_clients: int,
+                      up_bytes) -> dict:
+    """Attrs dict for a telemetry ``codec_encode`` event."""
+    return {"clients": int(n_clients),
+            "bytes": float(up_bytes) * int(n_clients),
+            "topk_frac": codec.topk_frac, "bits": codec.bits,
+            "error_feedback": codec.error_feedback}
+
+
+class LedgerSnapshot(NamedTuple):
+    """O(1) running-total snapshot of a :class:`ByteLedger`.
+
+    Integer and float accumulators are kept separate so deltas between two
+    snapshots are exact on the integer paths (no float cancellation).
+    """
+
+    up_i: int
+    down_i: int
+    up_f: float
+    down_f: float
+
+    @property
+    def up(self) -> float:
+        return float(self.up_i + self.up_f)
+
+    @property
+    def down(self) -> float:
+        return float(self.down_i + self.down_f)
+
+
 class ByteLedger:
     """Per-round, per-client cumulative communication record (host-side).
 
@@ -181,14 +213,26 @@ class ByteLedger:
     rounding drift over long runs. ``up``/``down`` expose the combined
     float64 view; totals are bit-identical to the all-float accumulation
     for every size below 2^53.
+
+    Scalar running totals are maintained alongside the per-client arrays,
+    so ``total_up``/``total_down`` and ``snapshot()``/``delta()`` are O(1)
+    -- consumers (telemetry counters, run summaries) no longer re-sum the
+    (m,) arrays each round. With a telemetry recorder attached, every
+    record call that carries a ``ts`` emits a ``ledger_record`` event with
+    the round's byte delta and the running totals.
     """
 
-    def __init__(self, m: int):
+    def __init__(self, m: int, *, telemetry=None):
         self.m = m
+        self.telemetry = NULL_RECORDER if telemetry is None else telemetry
         self._up_i = np.zeros(m, np.int64)
         self._down_i = np.zeros(m, np.int64)
         self._up_f = np.zeros(m, np.float64)
         self._down_f = np.zeros(m, np.float64)
+        self._tot_up_i = 0
+        self._tot_down_i = 0
+        self._tot_up_f = 0.0
+        self._tot_down_f = 0.0
         self.rounds: list[dict] = []
 
     @property
@@ -202,49 +246,82 @@ class ByteLedger:
         return self._down_i + self._down_f
 
     def record_round(self, *, down_mask: np.ndarray, up_mask: np.ndarray,
-                     down_bytes: float, up_bytes) -> dict:
+                     down_bytes: float, up_bytes, ts: float | None = None,
+                     round_idx: int | None = None) -> dict:
         """down_mask: clients the server contacted (they receive the
         broadcast); up_mask: clients whose upload completed; up_bytes:
         scalar or (m,) per-client encoded size."""
         return self.record_counts(
             down_counts=np.asarray(down_mask, bool).astype(np.int64),
             up_counts=np.asarray(up_mask, bool).astype(np.int64),
-            down_bytes=down_bytes, up_bytes=up_bytes)
+            down_bytes=down_bytes, up_bytes=up_bytes, ts=ts,
+            round_idx=round_idx)
 
     def record_counts(self, *, down_counts: np.ndarray,
                       up_counts: np.ndarray, down_bytes: float,
-                      up_bytes) -> dict:
+                      up_bytes, ts: float | None = None,
+                      round_idx: int | None = None) -> dict:
         """Count-based variant for the async server: one aggregation event
         may contact or receive from the same client several times (a client
         can sit in two overlapping cohorts), so transfers are integer COUNTS
         per client rather than boolean masks. n_down/n_up report distinct
-        clients; the byte totals weight by the counts."""
+        clients; the byte totals weight by the counts.
+
+        ``ts``/``round_idx`` tag the telemetry ``ledger_record`` event
+        (simulated time); omitted, the record is silent even with a
+        recorder attached."""
         down_counts = np.asarray(down_counts, np.int64)
         up_counts = np.asarray(up_counts, np.int64)
         up_pc = np.broadcast_to(np.asarray(up_bytes, np.float64), (self.m,))
         d = down_counts * float(down_bytes)
         u = up_counts * up_pc
         if float(down_bytes).is_integer():
-            self._down_i += down_counts * np.int64(down_bytes)
+            di = down_counts * np.int64(down_bytes)
+            self._down_i += di
+            self._tot_down_i += int(di.sum())
         else:
             self._down_f += d
+            self._tot_down_f += float(d.sum())
         if np.all(up_pc == np.floor(up_pc)):
-            self._up_i += up_counts * up_pc.astype(np.int64)
+            ui = up_counts * up_pc.astype(np.int64)
+            self._up_i += ui
+            self._tot_up_i += int(ui.sum())
         else:
             self._up_f += u
+            self._tot_up_f += float(u.sum())
         rec = {"round": len(self.rounds), "down": float(d.sum()),
                "up": float(u.sum()), "n_down": int((down_counts > 0).sum()),
                "n_up": int((up_counts > 0).sum())}
         self.rounds.append(rec)
+        if self.telemetry.enabled and ts is not None:
+            self.telemetry.event(
+                "ledger_record", ts=ts,
+                round_idx=len(self.rounds) - 1 if round_idx is None
+                else round_idx,
+                up=rec["up"], down=rec["down"], n_up=rec["n_up"],
+                n_down=rec["n_down"], total_up=self.total_up,
+                total_down=self.total_down)
         return rec
+
+    def snapshot(self) -> LedgerSnapshot:
+        """O(1) copy of the running totals (int/float paths separate)."""
+        return LedgerSnapshot(up_i=self._tot_up_i, down_i=self._tot_down_i,
+                              up_f=self._tot_up_f, down_f=self._tot_down_f)
+
+    def delta(self, since: LedgerSnapshot) -> dict:
+        """Bytes moved since ``since`` -- exact on the integer paths."""
+        return {"up": float((self._tot_up_i - since.up_i)
+                            + (self._tot_up_f - since.up_f)),
+                "down": float((self._tot_down_i - since.down_i)
+                              + (self._tot_down_f - since.down_f))}
 
     @property
     def total_up(self) -> float:
-        return float(self._up_i.sum() + self._up_f.sum())
+        return float(self._tot_up_i + self._tot_up_f)
 
     @property
     def total_down(self) -> float:
-        return float(self._down_i.sum() + self._down_f.sum())
+        return float(self._tot_down_i + self._tot_down_f)
 
     @property
     def total(self) -> float:

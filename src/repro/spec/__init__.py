@@ -38,4 +38,5 @@ from repro.spec.types import (                         # noqa: F401
     PolicySpec,
     SpecError,
     TaskSpec,
+    TelemetrySpec,
 )

@@ -24,7 +24,9 @@ under ``engine.terminate``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -98,9 +100,14 @@ def build(spec: ExperimentSpec) -> "RunHandle":
         else spec.seed
     profiles = registry.FLEETS[spec.fleet.kind].build(
         spec.fleet, spec.task.m, fleet_seed)
+    telemetry = None
+    if spec.telemetry.enabled:
+        from repro.telemetry import EventRecorder
+        telemetry = EventRecorder()
     sim = FedSim(alg=alg_entry.sim_alg, cfg=cfg, state=state,
                  batches=data.batches, loss_fn=data.loss_fn,
-                 profiles=profiles, sim=_sim_config(spec))
+                 profiles=profiles, sim=_sim_config(spec),
+                 telemetry=telemetry)
     return RunHandle(spec=spec, sim=sim, data=data)
 
 
@@ -177,44 +184,68 @@ class RunHandle:
         LM parameter pytree). The summary is the simulate CLI's historical
         schema -- alg/policy/engine/latency, rounds, f_final, accuracy,
         simulated time, straggler/byte ledger totals, and the staleness
-        stats under the async policy.
+        stats under the async policy. With ``spec.telemetry.enabled`` the
+        summary additionally carries a ``"telemetry"`` block (metric
+        snapshot + series, repro.telemetry.sinks.telemetry_summary) and the
+        configured sinks are written at run end; a telemetry-off summary
+        is byte-identical to previous releases.
         """
         eng = self.spec.engine
         entry = registry.ENGINES[eng.name]
         if entry.runner is not None:     # registered extension engine
             return entry.runner(self, report)
         sim = self.sim
+        tel = self.spec.telemetry
         f_hist: list[float] = []
         rounds_run = 0
-        if eng.name == "eager":
-            for _ in range(eng.rounds):
-                met = sim.step()
-                rounds_run += 1
-                f_hist.append(float(self._fobj(sim.state.w_tau)))
-                if report is not None:
-                    report(met, f_hist[-1])
-                if self._terminated(f_hist):
-                    break
-        else:                            # scan: fused multi-round chunks
-            collect = self._w_stackable
-            chunk = eng.chunk if eng.chunk is not None \
-                else (8 if eng.terminate else eng.rounds)
-            while rounds_run < eng.rounds:
-                todo = min(chunk, eng.rounds - rounds_run)
-                res = run_rounds(sim, todo, collect_w_tau=collect)
-                if collect:
-                    for met, w in zip(res.metrics, res.w_tau):
-                        f_hist.append(float(self._fobj(jnp.asarray(w))))
-                        if report is not None:
-                            report(met, f_hist[-1])
-                else:
-                    for met in res.metrics:
-                        if report is not None:
-                            report(met, None)
-                rounds_run += todo
-                if self._terminated(f_hist):
-                    break
-        return self._summary(f_hist, rounds_run)
+        wall0 = time.perf_counter() if tel.enabled else None
+        with contextlib.ExitStack() as stack:
+            if tel.enabled and tel.jax_profiler_dir:
+                from repro.telemetry import jax_profile
+                stack.enter_context(jax_profile(tel.jax_profiler_dir))
+            if eng.name == "eager":
+                for _ in range(eng.rounds):
+                    met = sim.step()
+                    rounds_run += 1
+                    f_hist.append(float(self._fobj(sim.state.w_tau)))
+                    if report is not None:
+                        report(met, f_hist[-1])
+                    if self._terminated(f_hist):
+                        break
+            else:                        # scan: fused multi-round chunks
+                collect = self._w_stackable
+                chunk = eng.chunk if eng.chunk is not None \
+                    else (8 if eng.terminate else eng.rounds)
+                while rounds_run < eng.rounds:
+                    todo = min(chunk, eng.rounds - rounds_run)
+                    res = run_rounds(sim, todo, collect_w_tau=collect)
+                    if collect:
+                        for met, w in zip(res.metrics, res.w_tau):
+                            f_hist.append(float(self._fobj(jnp.asarray(w))))
+                            if report is not None:
+                                report(met, f_hist[-1])
+                    else:
+                        for met in res.metrics:
+                            if report is not None:
+                                report(met, None)
+                    rounds_run += todo
+                    if self._terminated(f_hist):
+                        break
+        summary = self._summary(f_hist, rounds_run)
+        if tel.enabled:
+            from repro.telemetry import (telemetry_summary,
+                                         write_events_jsonl, write_trace)
+            recorder = sim.telemetry
+            summary["telemetry"] = telemetry_summary(
+                recorder, objective=f_hist, rounds=rounds_run,
+                wall_s=time.perf_counter() - wall0,
+                host_syncs=sim.host_syncs)
+            if tel.events_jsonl:
+                write_events_jsonl(recorder.events, tel.events_jsonl)
+            if tel.trace_out:
+                write_trace(recorder.events, tel.trace_out,
+                            label=self.spec.name)
+        return summary
 
     def _summary(self, f_hist: list, rounds_run: int) -> dict:
         sim, spec = self.sim, self.spec

@@ -462,6 +462,20 @@ def _validate_engine(spec: ExperimentSpec) -> None:
                  f"rule; task kind is {spec.task.kind!r}")
 
 
+def _validate_telemetry(spec: ExperimentSpec) -> None:
+    tel = spec.telemetry
+    for field in ("events_jsonl", "trace_out", "jax_profiler_dir"):
+        val = getattr(tel, field)
+        if val is None:
+            continue
+        _require(isinstance(val, str) and val != "",
+                 f"[telemetry] {field} must be a non-empty path; "
+                 f"got {val!r}")
+        _require(tel.enabled,
+                 f"[telemetry] {field} requires enabled = true (a sink on "
+                 "a disabled recorder would silently write nothing)")
+
+
 def validate_spec(spec: ExperimentSpec) -> None:
     """Raise SpecError on the first inconsistency found."""
     from repro.spec.types import _SECTIONS
@@ -478,7 +492,8 @@ def validate_spec(spec: ExperimentSpec) -> None:
                  f"got {sub_seed}")
     _require(isinstance(spec.name, str) and spec.name != "",
              f"name must be a non-empty string; got {spec.name!r}")
-    for sec in ("task", "algorithm", "fleet", "policy", "codec", "engine"):
+    for sec in ("task", "algorithm", "fleet", "policy", "codec", "engine",
+                "telemetry"):
         for f in dataclasses.fields(getattr(spec, sec)):
             val = getattr(getattr(spec, sec), f.name)
             _require(not isinstance(val, bool) or "bool" in f.type,
@@ -489,3 +504,4 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _validate_policy(spec)
     _validate_codec(spec.codec)
     _validate_engine(spec)
+    _validate_telemetry(spec)

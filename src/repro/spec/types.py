@@ -173,6 +173,29 @@ class CodecSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Run telemetry (repro.telemetry): event tracing, metrics, sinks.
+
+    ``enabled`` attaches an event recorder to the run -- observational
+    only, so trajectories are bit-for-bit identical either way (pinned in
+    tests/test_telemetry.py). The sink paths are each optional and REQUIRE
+    ``enabled = true`` (a sink on a disabled recorder would silently write
+    nothing -- that is a validation error, not a no-op):
+
+    events_jsonl: write the event stream as JSONL (one event per line).
+    trace_out: write a Perfetto/Chrome ``trace_event`` JSON timeline
+        (one track per client, one per server policy).
+    jax_profiler_dir: wrap the run in ``jax.profiler`` for a real
+        wall-time trace of the engine (TensorBoard/Perfetto format).
+    """
+
+    enabled: bool = False
+    events_jsonl: str | None = None
+    trace_out: str | None = None
+    jax_profiler_dir: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """How rounds execute: engine choice, budget, chunking, termination.
 
@@ -201,6 +224,7 @@ _SECTIONS: dict[str, type] = {
     "policy": PolicySpec,
     "codec": CodecSpec,
     "engine": EngineSpec,
+    "telemetry": TelemetrySpec,
 }
 
 
@@ -215,6 +239,7 @@ class ExperimentSpec:
     policy: PolicySpec = PolicySpec()
     codec: CodecSpec = CodecSpec()
     engine: EngineSpec = EngineSpec()
+    telemetry: TelemetrySpec = TelemetrySpec()
     name: str = "experiment"
     seed: int = 0
 

@@ -1,0 +1,43 @@
+"""Run telemetry: typed event tracing, metrics, and timeline export.
+
+The subsystem is observational only -- recorders are handed already-computed
+host values, draw no RNG, and trigger no jit dispatch, so enabling
+telemetry never changes trajectories (pinned bit-for-bit in
+tests/test_telemetry.py). The default recorder is a shared no-op whose cost
+is one attribute check per instrumentation site.
+
+Layout:
+  events.py   -- the event taxonomy + recorders (Event, EventRecorder,
+                 NULL_RECORDER)
+  metrics.py  -- counters/gauges/histograms derived from the event stream
+  sinks.py    -- JSONL run log + end-of-run summary dict
+  trace.py    -- Perfetto/Chrome ``trace_event`` timeline exporter
+  profiler.py -- opt-in ``jax.profiler`` wall-time hook
+
+See docs/observability.md for the event taxonomy and metric tables.
+"""
+from repro.telemetry.events import (EVENT_KINDS, NULL_RECORDER, Event,
+                                    EventRecorder, NullRecorder)
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.profiler import jax_profile
+from repro.telemetry.sinks import (read_events_jsonl, telemetry_summary,
+                                   write_events_jsonl)
+from repro.telemetry.trace import (REQUIRED_KEYS, to_trace, validate_trace,
+                                   write_trace)
+
+__all__ = [
+    "EVENT_KINDS",
+    "Event",
+    "EventRecorder",
+    "MetricsRegistry",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "REQUIRED_KEYS",
+    "jax_profile",
+    "read_events_jsonl",
+    "telemetry_summary",
+    "to_trace",
+    "validate_trace",
+    "write_events_jsonl",
+    "write_trace",
+]

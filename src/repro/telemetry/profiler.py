@@ -1,0 +1,41 @@
+"""Opt-in ``jax.profiler`` hook for real wall-time traces.
+
+Simulated-time telemetry (events.py / trace.py) describes what the modeled
+fleet did; this module answers the other question -- where the WALL time of
+the scan engine actually goes (compile vs. dispatch vs. device compute).
+``jax_profile(trace_dir)`` wraps a run in ``jax.profiler.start_trace`` /
+``stop_trace``; the resulting TensorBoard/Perfetto trace lands under
+``trace_dir``. A falsy ``trace_dir`` makes it a no-op, and profiler
+start/stop failures degrade to a warning rather than killing the run (the
+profiler is diagnostics, never a dependency of results).
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+
+@contextlib.contextmanager
+def jax_profile(trace_dir):
+    """Context manager tracing wall time via jax.profiler; no-op if falsy."""
+    if not trace_dir:
+        yield
+        return
+    started = False
+    try:
+        import jax
+        jax.profiler.start_trace(str(trace_dir))
+        started = True
+    except Exception as e:  # pragma: no cover - environment-dependent
+        warnings.warn(f"jax.profiler trace could not start: {e}",
+                      stacklevel=2)
+    try:
+        yield
+    finally:
+        if started:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception as e:  # pragma: no cover
+                warnings.warn(f"jax.profiler trace could not stop: {e}",
+                              stacklevel=2)

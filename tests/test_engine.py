@@ -99,6 +99,24 @@ def test_scan_matches_eager_bitforbit(task, policy, kw):
     _assert_bitforbit(eager, scan)
 
 
+@pytest.mark.parametrize("policy,kw", POLICIES, ids=[p for p, _ in POLICIES])
+def test_sim_metrics_schema_field_for_field(task, policy, kw):
+    """Both engines build SimMetrics through the ONE constructor
+    (server.make_sim_metrics): identical field sets and every field equal
+    value-for-value, so the schemas cannot drift apart."""
+    eager = _build(task, policy, kw)
+    scan = _build(task, policy, kw)
+    eager.run(4)
+    run_rounds(scan, 4)
+    assert len(eager.metrics) == len(scan.metrics) == 4
+    for em, sm in zip(eager.metrics, scan.metrics):
+        assert em._fields == sm._fields
+        for field in em._fields:
+            ev, sv = getattr(em, field), getattr(sm, field)
+            assert type(ev) is type(sv), (policy, field)
+            assert ev == sv, (policy, field, ev, sv)
+
+
 def test_scan_matches_eager_baselines(task):
     """The baseline algorithms run the same scan body factory."""
     for alg in ("sfedavg", "sfedprox"):

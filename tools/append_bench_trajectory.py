@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Append one BENCH_engine.json result as a row in BENCH_trajectory.json.
+
+BENCH_trajectory.json is the committed per-PR benchmark history: each CI
+benchmark run appends (or, for a re-run of the same label, replaces) one
+flat row distilled from that run's BENCH_engine.json, so engine-speed
+regressions show up as a diff in review instead of silently drifting.
+
+Schema:
+
+  {"schema": 1,
+   "rows": [{"label": "pr6", "backend": "cpu", "d": 2000, "m": 16,
+             "rounds": 120,
+             "eager_rounds_per_sec": ..., "scan_rounds_per_sec": ...,
+             "speedup_rounds_per_sec": ..., "speedup_wall_to_target": ...,
+             "eager_wall_to_target_s": ..., "scan_wall_to_target_s": ...,
+             "rounds_to_target": ..., "target_objective": ...}, ...]}
+
+Rows are keyed by ``label`` (CI passes the PR/branch name); re-running a
+label replaces its row in place, keeping the file one-row-per-PR.
+
+Usage:
+  python tools/append_bench_trajectory.py \
+      --engine-json BENCH_engine.json --out BENCH_trajectory.json \
+      --label pr6
+
+Stdlib-only (runs in the CI docs/bench jobs without the package
+installed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = 1
+
+
+def row_from_engine(summary: dict, label: str) -> dict:
+    """Distill one BENCH_engine.json summary into a trajectory row."""
+    cfg = summary["config"]
+    eager, scan = summary["engines"]["eager"], summary["engines"]["scan"]
+    return {
+        "label": label,
+        "backend": cfg["backend"],
+        "d": cfg["d"], "m": cfg["m"], "rounds": cfg["rounds"],
+        "eager_rounds_per_sec": eager["rounds_per_sec"],
+        "scan_rounds_per_sec": scan["rounds_per_sec"],
+        "speedup_rounds_per_sec": summary["speedup_rounds_per_sec"],
+        "speedup_wall_to_target": summary["speedup_wall_to_target"],
+        "eager_wall_to_target_s": eager["wall_to_target_s"],
+        "scan_wall_to_target_s": scan["wall_to_target_s"],
+        "rounds_to_target": scan["rounds_to_target"],
+        "target_objective": summary["target_objective"],
+    }
+
+
+def append(engine_json: Path, out: Path, label: str) -> dict:
+    """Load, append/replace the labeled row, write back. Returns the doc."""
+    summary = json.loads(engine_json.read_text())
+    if out.exists():
+        doc = json.loads(out.read_text())
+        if doc.get("schema") != SCHEMA:
+            raise SystemExit(f"{out}: unknown schema {doc.get('schema')!r} "
+                             f"(this tool writes schema {SCHEMA})")
+    else:
+        doc = {"schema": SCHEMA, "rows": []}
+    row = row_from_engine(summary, label)
+    rows = [r for r in doc["rows"] if r.get("label") != label]
+    rows.append(row)
+    doc["rows"] = rows
+    out.write_text(json.dumps(doc, indent=1) + "\n")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="append a BENCH_engine.json run to the committed "
+                    "benchmark trajectory")
+    ap.add_argument("--engine-json", required=True, type=Path,
+                    help="BENCH_engine.json produced by "
+                         "benchmarks/bench_engine.py --json")
+    ap.add_argument("--out", required=True, type=Path,
+                    help="trajectory file to append to (created if missing)")
+    ap.add_argument("--label", required=True,
+                    help="row key, e.g. the PR number or branch name; "
+                         "re-running a label replaces its row")
+    args = ap.parse_args(argv)
+    doc = append(args.engine_json, args.out, args.label)
+    print(f"{args.out}: {len(doc['rows'])} row(s); "
+          f"latest label={args.label}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
