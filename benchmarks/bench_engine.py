@@ -21,7 +21,19 @@ Emits CSV rows for benchmarks/run.py and --json writes BENCH_engine.json:
                          "host_syncs_per_round"},
                "scan": {...}},
    "speedup_rounds_per_sec": ..., "speedup_wall_to_target": ...,
-   "target_objective": ...}
+   "target_objective": ...,
+   "async": {"config": {...},
+             "engines": {"eager": {"rounds_per_sec", "host_syncs",
+                                   "host_syncs_per_round"},
+                         "scan": {...}},
+             "speedup_rounds_per_sec": ...}}
+
+The async cell times the SAME event-loop semantics under both engines
+(concurrency-capped buffered aggregation, Pareto stragglers): eager pays
+per-event jit dispatches, the scan engine records each chunk's event loop
+on the host and replays it as one compiled scan (docs/perf.md). CI gates
+its speedup at >= 2x (the recording pass bounds it below the sync cell's
+factor).
 
 The speedup is dispatch-bound: on the reduced task (--quick / default) the
 round math is microseconds and scan wins by the dispatch factor; at the
@@ -154,6 +166,62 @@ def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
     }
 
 
+def bench_async(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
+                n: int = 14, rounds: int = 60, repeats: int = 3,
+                seed: int = 0) -> dict:
+    """The async cell: eager event loop vs record/replay scan engine.
+
+    Same declarative-cell discipline as :func:`bench`; no objective race
+    (the trajectories are bit-identical -- tests/test_engine_async.py --
+    so rounds/sec is the whole story)."""
+    cell = xspec.ExperimentSpec(
+        name="bench-engine/async", seed=seed,
+        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
+        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
+                                      eps_dp=0.0),
+        fleet=xspec.FleetSpec(kind="synthetic", availability=0.9,
+                              latency="pareto", latency_alpha=1.3),
+        policy=xspec.PolicySpec(name="async", buffer_size=4,
+                                max_concurrency=6),
+        engine=xspec.EngineSpec(name="eager", rounds=rounds)).validate()
+    mk = lambda: cell.build().sim  # noqa: E731
+
+    mk().run(2)                                   # warm the eager programs
+    run_rounds(mk(), rounds)                      # compile the replay scan
+
+    def timed(drive):
+        sim = mk()
+        sim.host_syncs = 0
+        t0 = time.perf_counter()
+        drive(sim)
+        jax.block_until_ready(sim.state.w_tau)
+        return time.perf_counter() - t0, sim.host_syncs
+
+    eager_t, eager_syncs = zip(*(timed(lambda s: s.run(rounds))
+                                 for _ in range(repeats)))
+    scan_t, scan_syncs = zip(*(timed(lambda s: run_rounds(s, rounds))
+                               for _ in range(repeats)))
+    eager_rps = rounds / statistics.median(eager_t)
+    scan_rps = rounds / statistics.median(scan_t)
+
+    def eng(rps, syncs):
+        return {"rounds_per_sec": rps,
+                "host_syncs": int(statistics.median(syncs)),
+                "host_syncs_per_round":
+                    statistics.median(syncs) / rounds}
+
+    return {
+        "config": {"task": "paper_logreg", "policy": "async", "d": d,
+                   "m": m, "k0": k0, "rho": rho, "n": n, "rounds": rounds,
+                   "buffer_size": 4, "max_concurrency": 6,
+                   "repeats": repeats, "seed": seed,
+                   "backend": jax.default_backend()},
+        "engines": {"eager": eng(eager_rps, eager_syncs),
+                    "scan": eng(scan_rps, scan_syncs)},
+        "speedup_rounds_per_sec": scan_rps / eager_rps,
+    }
+
+
 def rows_from(summary: dict) -> list:
     rows = []
     for name, e in summary["engines"].items():
@@ -169,31 +237,55 @@ def rows_from(summary: dict) -> list:
                  f"d={summary['config']['d']};m={summary['config']['m']}"))
     rows.append(("engine/speedup_wall_to_target",
                  summary["speedup_wall_to_target"], ""))
+    if "async" in summary:
+        a = summary["async"]
+        for name, e in a["engines"].items():
+            rows.append((f"engine/async/{name}/rounds_per_sec",
+                         e["rounds_per_sec"],
+                         "host_syncs_per_round="
+                         f"{e['host_syncs_per_round']:.3f}"))
+        rows.append(("engine/async/speedup_rounds_per_sec",
+                     a["speedup_rounds_per_sec"],
+                     f"buffer_size={a['config']['buffer_size']};"
+                     f"max_concurrency={a['config']['max_concurrency']}"))
     return rows
 
 
 def run(**kw) -> list:
     """benchmarks/run.py entry point: CSV rows."""
-    return rows_from(bench(**kw))
+    summary = bench(**kw)
+    summary["async"] = bench_async(**kw)
+    return rows_from(summary)
 
 
-def export_trace(trace_out, *, jax_profile_dir=None, d: int = 4000,
-                 m: int = 50, k0: int = 8, rho: float = 0.5, n: int = 14,
-                 rounds: int = 60, seed: int = 0, **_ignored) -> dict:
-    """Run the benchmark's scan cell with telemetry and export the timeline.
+def export_trace(trace_out, *, jax_profile_dir=None, policy: str = "sync",
+                 d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
+                 n: int = 14, rounds: int = 60, seed: int = 0,
+                 **_ignored) -> dict:
+    """Run a benchmark scan cell with telemetry and export the timeline.
 
     One scan-engine run of the benchmark scenario with the event recorder
     attached: the simulated timeline goes to ``trace_out`` (Perfetto
     trace_event JSON), and ``jax_profile_dir`` additionally wraps the run
     in ``jax.profiler`` for a REAL wall-time trace of the fused scan --
     the artifact to look at when the speedup number regresses.
+    ``policy="async"`` exports the async cell instead: per-client
+    dispatch/arrival/merge tracks of the recorded event loop the scan
+    replayed (the CI ``bench-engine-async-trace`` artifact).
     """
+    if policy == "async":
+        fleet = xspec.FleetSpec(kind="synthetic", availability=0.9,
+                                latency="pareto", latency_alpha=1.3)
+        pol = xspec.PolicySpec(name="async", buffer_size=4,
+                               max_concurrency=6)
+    else:
+        fleet = xspec.FleetSpec(kind="uniform")
+        pol = xspec.PolicySpec(name="sync")
     spec = xspec.ExperimentSpec(
-        name="bench-engine/scan-trace", seed=seed,
+        name=f"bench-engine/scan-trace-{policy}", seed=seed,
         task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
         algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0),
-        fleet=xspec.FleetSpec(kind="uniform"),
-        policy=xspec.PolicySpec(name="sync"),
+        fleet=fleet, policy=pol,
         engine=xspec.EngineSpec(name="scan", rounds=rounds),
         telemetry=xspec.TelemetrySpec(
             enabled=True, trace_out=str(trace_out),
@@ -215,12 +307,17 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None,
                     help="export a Perfetto trace_event JSON timeline of "
                          "one scan-engine run of the benchmark cell")
+    ap.add_argument("--async-trace-out", default=None,
+                    help="export the ASYNC cell's timeline: per-client "
+                         "dispatch/arrival/merge tracks of the recorded "
+                         "event loop the scan replayed")
     ap.add_argument("--jax-profile", default=None, metavar="DIR",
                     help="with --trace-out: wrap that run in jax.profiler "
                          "for a real wall-time trace under DIR")
     args = ap.parse_args(argv)
     kw = QUICK_KW if args.quick else (dict(d=45222) if args.full else {})
     summary = bench(**kw)
+    summary["async"] = bench_async(**kw)
     for r in rows_from(summary):
         print(",".join(map(str, r)))
     if args.json:
@@ -229,6 +326,10 @@ def main(argv=None):
     if args.trace_out:
         export_trace(args.trace_out, jax_profile_dir=args.jax_profile, **kw)
         print(f"engine/trace_out,{args.trace_out}", file=sys.stderr)
+    if args.async_trace_out:
+        export_trace(args.async_trace_out, policy="async", **kw)
+        print(f"engine/async_trace_out,{args.async_trace_out}",
+              file=sys.stderr)
     return 0
 
 

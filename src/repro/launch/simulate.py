@@ -42,14 +42,20 @@ silently ignored (the spec layer enforces the same ownership rules).
 Device fleets come from --trace-file (resampled real logs) or the
 synthetic lognormal profiles. Full semantics: docs/sim.md.
 
-``--engine scan`` runs the clocked policies through the fused on-device
-round engine (repro.sim.engine): K rounds compile into one ``lax.scan``
-with donated state buffers and the participation-mask stream precomputed,
-reproducing the eager trajectory bit-for-bit at a fraction of the host
-dispatch overhead (docs/perf.md, benchmarks/bench_engine.py):
+``--engine scan`` runs EVERY policy through the fused on-device round
+engine (repro.sim.engine). Clocked policies compile K rounds into one
+``lax.scan`` with donated state buffers and the participation-mask stream
+precomputed; the async policy records its event loop per chunk and
+replays it as one compiled scan over a fixed-capacity payload table. Both
+reproduce the eager trajectory bit-for-bit -- states, metrics, byte
+ledger and telemetry event stream -- at a fraction of the host dispatch
+overhead, and ``--terminate`` stops at exactly the eager stopping round
+(docs/perf.md, benchmarks/bench_engine.py):
 
   python -m repro.launch.simulate --alg fedepm --aggregation sync \
       --engine scan --m 50 --rounds 200
+  python -m repro.launch.simulate --alg fedepm --aggregation async \
+      --buffer-size 4 --engine scan --rounds 200
 """
 from __future__ import annotations
 
@@ -224,10 +230,10 @@ def main(argv=None):
                          "'scan' compiles multi-round chunks into one "
                          "on-device lax.scan with donated state buffers -- "
                          "bit-identical trajectory, far fewer host syncs "
-                         "(docs/perf.md). async aggregation always runs "
-                         "the event engine; --terminate is checked per "
-                         "8-round chunk under scan. Default: eager, or the "
-                         "spec file's engine")
+                         "(docs/perf.md). async aggregation record/replays "
+                         "its event loop through the same compiled path; "
+                         "--terminate stops at exactly the eager stopping "
+                         "round. Default: eager, or the spec file's engine")
     ap.add_argument("--deadline", type=float,
                     default=_KNOB_DEFAULTS["deadline"],
                     help="deadline policy cutoff in simulated seconds "

@@ -17,7 +17,13 @@ with t_i = inf when the client is unavailable this round. Everything here is
 host-side numpy: the simulation decides masks and wall-clock OUTSIDE the
 jitted round functions, then feeds the mask in through the round hook
 (core.fedepm.fedepm_round(..., mask=...)), so the algorithmic math is never
-forked.
+forked. That host/device split is also what makes the scan engine's
+record/replay possible: because every draw here consumes the sim's ONE
+``numpy.random.Generator`` in event order, the recording pass
+(repro.sim.engine) reproduces arrival times, availability and adaptive
+cutoffs exactly by running this same code -- no latency model is ever
+re-implemented on device, and snapshot/restore only has to checkpoint the
+generator's bit state to replay a chunk deterministically.
 
 Latency distributions (``make_latency_model``):
 

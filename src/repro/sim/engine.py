@@ -50,14 +50,45 @@ before the first donating call, so references the caller still holds --
 e.g. the ``state=s0`` it passed to ``FedSim`` -- stay valid; every
 intermediate chunk state is engine-owned and safely donated.
 
+Async record/replay (policy="async")
+------------------------------------
 The async policy is event-driven (client-level queue, data-dependent
-control flow) and cannot be scan-compiled; ``run_rounds`` falls back to
-the eager event path, which PR 4 batched separately (vectorized event
-pushes, pow2-bucketed row gathers, cached device masks). Architecture
-notes and how to read ``BENCH_engine.json``: docs/perf.md.
+control flow), so it cannot be masked into the clocked round scan above.
+Instead the engine RECORDS it: ``FedSim._step_async`` -- the one
+scheduling pump both engines share -- runs C aggregation events with a
+recording executor plugged into its device-work seam. Candidate draws
+replay from a precomputed fire-count key stream (``_CandStream``: the
+selection key/counter advance only when a dispatch fires, so the mask
+stream is a pure function of the chunk-entry state); fires and merges
+append host metadata (masks, table slots, staleness weights, codec
+serials) to an op program instead of dispatching jit calls. One compiled
+``lax.scan`` then replays the program (``_build_async_chunk_fn``), one
+step per dispatch: the step runs the unmodified round function and
+writes the dispatch group's fresh Z/W rows into a fixed-capacity
+on-device payload TABLE (``_AsyncTable`` -- the bounded in-flight set;
+slots alloc lowest-first at dispatch, free at merge), then an inner scan
+folds the merges recorded before the next dispatch through the shared
+``server.merge_contribution`` against the table rows. Both levels are
+branch-free -- everything is validity-masked ``tree_where`` selection,
+never ``lax.cond``/``lax.switch``, because conditional lowering perturbs
+the round's fused reductions by ~1 ulp. State, EF memory, table and the
+optional w_tau stack are all donated. Every host-side
+quantity (clock, heap order, staleness, metrics, ledger, telemetry) is
+computed by the SAME pump code as eager, and every device value is the
+same math on the same bits, so the trajectory -- including the telemetry
+event stream -- is bit-for-bit the eager one
+(tests/test_engine_async.py).
+
+Client-axis sharding: ``run_rounds(..., mesh=...)`` lays the stacked
+(m, ...) state leaves out over a device mesh's "data" axis (the repo's
+logical rule client -> data, sharding/rules.py + specs.leaf_spec rails)
+before the compiled chunks run, so XLA partitions the per-client round
+math data-parallel; a single-device mesh is bit-identical to unsharded.
+Architecture notes and how to read ``BENCH_engine.json``: docs/perf.md.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from typing import NamedTuple
 
@@ -68,8 +99,10 @@ import numpy as np
 from repro.core import baselines, fedepm, participation
 from repro.core.treeutil import tmap, tree_where, tree_where_client
 from repro.sim import clients as simclients
-from repro.sim.server import (FedSim, SimMetrics, emit_clocked_round_events,
-                              fifo_cache_get, make_sim_metrics)
+from repro.sim.server import (_EAGER_ASYNC_EXEC, _EV_UPLOAD, FedSim,
+                              SimMetrics, copy_tree,
+                              emit_clocked_round_events, fifo_cache_get,
+                              make_sim_metrics, merge_contribution)
 from repro.sim.transport import codec_roundtrip, ef_roundtrip
 
 _SCAN_POLICIES = ("sync", "deadline", "adaptive", "overselect")
@@ -205,13 +238,13 @@ def _chunk_fn(sim: FedSim, collect_w_tau: bool):
                           cap=32)
 
 
-def _build_candidate_stream(sim: FedSim):
-    """Jitted scan replaying the per-round selection key splits.
+def _make_selector(sim: FedSim):
+    """Jit-safe candidate selector ``(k_sel, k) -> (m,) bool`` for ``sim``.
 
-    carry = (key, k): the key advances (first output of the round's
-    3-way split) and k advances by k0 only on non-abandoned rounds,
-    mirroring how the eager driver leaves the state untouched when a round
-    is abandoned. Returns the (C, m) candidate-mask stream.
+    Replicates exactly what the algorithm's default mask function computes
+    from the round's 3-way key split -- ONE definition shared by the
+    clocked candidate-stream scan and the async fire-count stream, so
+    neither replay can drift from the eager ``sim._candidates`` draw.
     """
     cfg = sim.cfg
     m, k0 = cfg.m, cfg.k0
@@ -220,20 +253,33 @@ def _build_candidate_stream(sim: FedSim):
 
         def select(k_sel, k):
             return participation.sample_uniform(k_sel, m, rho_eff)
+        return select
+    sampler = getattr(cfg, "sampler", "uniform")
+    if sampler == "uniform":
+        def select(k_sel, k):
+            return participation.sample_uniform(k_sel, m, cfg.rho)
+    elif sampler == "coverage":
+        def select(k_sel, k):
+            return participation.sample_coverage(
+                k_sel, m, cfg.rho, k // k0, cfg.s0)
+    elif sampler == "full":
+        def select(k_sel, k):
+            return jnp.ones((m,), bool)
     else:
-        sampler = getattr(cfg, "sampler", "uniform")
-        if sampler == "uniform":
-            def select(k_sel, k):
-                return participation.sample_uniform(k_sel, m, cfg.rho)
-        elif sampler == "coverage":
-            def select(k_sel, k):
-                return participation.sample_coverage(
-                    k_sel, m, cfg.rho, k // k0, cfg.s0)
-        elif sampler == "full":
-            def select(k_sel, k):
-                return jnp.ones((m,), bool)
-        else:
-            raise ValueError(f"unknown sampler {sampler!r}")
+        raise ValueError(f"unknown sampler {sampler!r}")
+    return select
+
+
+def _build_candidate_stream(sim: FedSim):
+    """Jitted scan replaying the per-round selection key splits.
+
+    carry = (key, k): the key advances (first output of the round's
+    3-way split) and k advances by k0 only on non-abandoned rounds,
+    mirroring how the eager driver leaves the state untouched when a round
+    is abandoned. Returns the (C, m) candidate-mask stream.
+    """
+    k0 = sim.cfg.k0
+    select = _make_selector(sim)
 
     def stream(key, k, abandoned):
         def body(carry, ab):
@@ -303,11 +349,456 @@ def _copy_tree(tree):
 
 
 # ---------------------------------------------------------------------------
+# async record/replay (policy="async")
+# ---------------------------------------------------------------------------
+
+#: async candidate masks are computed in blocks of this many fires per
+#: device dispatch (one host transfer per block, not per draw)
+_ASYNC_STREAM_BLOCK = 64
+
+_ASYNC_STREAM_CACHE: dict = {}
+
+
+def _async_stream_fn(sim: FedSim):
+    def build():
+        select = _make_selector(sim)
+        k0 = sim.cfg.k0
+
+        def block(key, k):
+            def body(carry, _):
+                key, k = carry
+                next_key, k_sel, _ = jax.random.split(key, 3)
+                cand = select(k_sel, k)
+                return (next_key, k + jnp.asarray(k0, k.dtype)), cand
+
+            (key, k), cands = jax.lax.scan(
+                body, (key, k), None, length=_ASYNC_STREAM_BLOCK)
+            return cands, key, k
+
+        return jax.jit(block)
+
+    return fifo_cache_get(_ASYNC_STREAM_CACHE, (sim.cfg, sim.sim.policy),
+                          build, cap=32)
+
+
+class _CandStream:
+    """Async candidate masks indexed by FIRE COUNT (host-side cache).
+
+    The selection key and step counter advance ONLY when a dispatch group
+    fires (one key split + k0 per round-function call), never on the draw
+    itself -- so the whole mask stream of a recording chunk is a pure
+    function of the chunk-entry algorithm state: mask ``n`` is what the
+    eager server would draw after ``n`` fires. An all-offline cohort's
+    retry re-draws the SAME index (no fire happened), reproducing eager's
+    repeated draw from the unchanged key with fresh availability.
+    """
+
+    def __init__(self, sim: FedSim):
+        self._sim = sim
+        self._fn = _async_stream_fn(sim)
+        self._key = sim.state.key
+        self._k = sim.state.k
+        self._masks: list[np.ndarray] = []
+
+    def mask(self, n_fires: int) -> np.ndarray:
+        while n_fires >= len(self._masks):
+            cands, self._key, self._k = self._fn(self._key, self._k)
+            self._sim.host_syncs += 1
+            self._masks.extend(np.asarray(cands))
+        return self._masks[n_fires]
+
+
+class _AsyncTable:
+    """Fixed-capacity on-device payload table: the bounded in-flight set.
+
+    One row per outstanding upload: ``z``/``w`` are (cap, ...) pytrees
+    whose row ``slot`` holds a dispatched client's upload/iterate rows,
+    written by the fire op that dispatched it and read back by the merge
+    op that folds it in. A table IS a ``_Contribution`` batch (``slot`` ==
+    batch row), so the eager merge path consumes table-backed
+    contributions through the same ``merge_contribution`` call. Slots
+    allocate lowest-index-first from a min-heap -- a deterministic rule,
+    so recorded slot assignments are reproducible -- and free when their
+    contribution merges. With the ``event_table_capacity`` knob pinned the
+    table never grows (overflow raises, naming the knob); unset, it
+    doubles on demand (each capacity compiles one more chunk program).
+    """
+
+    def __init__(self, Z, W, cap: int, *, fixed: bool):
+        self.cap = cap
+        self.fixed = fixed
+        self.z = tmap(lambda x: jnp.zeros((cap,) + x.shape[1:], x.dtype), Z)
+        self.w = tmap(lambda x: jnp.zeros((cap,) + x.shape[1:], x.dtype), W)
+        self._free = list(range(cap))
+
+    def alloc(self) -> int:
+        if not self._free:
+            if self.fixed:
+                raise ValueError(
+                    f"async event table overflow: all {self.cap} slots "
+                    f"hold in-flight uploads; raise the engine's "
+                    f"event_table_capacity knob (or unset it to let the "
+                    f"table grow on demand)")
+            grow = self.cap
+            self.z = tmap(lambda x: jnp.concatenate(
+                [x, jnp.zeros((grow,) + x.shape[1:], x.dtype)]), self.z)
+            self.w = tmap(lambda x: jnp.concatenate(
+                [x, jnp.zeros((grow,) + x.shape[1:], x.dtype)]), self.w)
+            self._free = list(range(self.cap, self.cap + grow))
+            self.cap += grow
+        return heapq.heappop(self._free)
+
+    def free(self, slot: int) -> None:
+        heapq.heappush(self._free, slot)
+
+    def clone(self) -> "_AsyncTable":
+        t = object.__new__(_AsyncTable)
+        t.cap, t.fixed = self.cap, self.fixed
+        t.z, t.w = copy_tree(self.z), copy_tree(self.w)
+        t._free = list(self._free)
+        return t
+
+
+class _RecordAsyncExec:
+    """Recording executor: defers device work into a replayable op program.
+
+    Plugged into ``FedSim._step_async``'s executor seam for the chunk's C
+    steps. Candidate draws replay from the fire-count stream; ``fire``/
+    ``merge`` append host metadata only (masks, table slots, staleness
+    weights, codec serials) -- no jit dispatch happens until the recorded
+    program replays as ONE compiled scan. Slot lifecycle resolves at
+    record time (alloc at fire, free at merge); replay executes ops in
+    recorded order, so a slot reused by a later fire is always rewritten
+    AFTER the merge that read it.
+    """
+
+    recording = True
+
+    def __init__(self, stream: _CandStream, table: _AsyncTable):
+        self.stream = stream
+        self.table = table
+        self.ops: list[dict] = []
+        self.n_fires = 0
+        self.cur_step = 0
+
+    def draw_candidates(self, sim) -> np.ndarray:
+        return self.stream.mask(self.n_fires)
+
+    def fire(self, sim, group, mask: np.ndarray, contribs) -> None:
+        slots = []
+        for c in contribs:
+            c.slot = self.table.alloc()
+            slots.append((c.slot, c.client))
+        self.ops.append({
+            "kind": 0, "step": self.cur_step, "mask": mask,
+            "agg": (sim._cohort_live | mask)
+            if sim._step_agg is not None else mask,
+            "slots": slots})
+        self.n_fires += 1
+
+    def merge(self, sim, c, staleness: int, gamma: float) -> None:
+        self.ops.append({
+            "kind": 1, "step": self.cur_step, "slot": c.slot,
+            "client": c.client, "serial": c.serial,
+            "gamma": np.float32(gamma)})
+        self.table.free(c.slot)
+
+
+def _async_chunk_fn(sim: FedSim, collect_w_tau: bool):
+    key = ("async", sim._round_fn, sim._loss_fn, sim.cfg, sim.sim.codec,
+           sim._ef, collect_w_tau, id(sim._batches))
+    return fifo_cache_get(
+        _CHUNK_FN_CACHE, key,
+        lambda: _build_async_chunk_fn(sim, collect_w_tau), cap=32)
+
+
+def _build_async_chunk_fn(sim: FedSim, collect_w_tau: bool):
+    """Compiled async replay: ONE ``lax.scan`` over the recorded program.
+
+    The program is GROUPED: one scan step = one dispatch (validity-masked)
+    followed by the merges recorded between it and the next dispatch (an
+    inner ``lax.scan`` over ``Mmax`` validity-masked merge records). The
+    carry is (algorithm state, EF memory, table z, table w, w_tau stack),
+    every buffer donated.
+
+    There are NO data-dependent conditionals anywhere in the body -- no
+    ``lax.switch``, no ``lax.cond``. Wrapping the round function in either
+    changes how XLA fuses its reductions and moves the DP-noise arithmetic
+    by ~1 ulp relative to the eager jit; a plain scan body that runs the
+    round unconditionally and selects outcomes with ``tree_where`` is
+    bit-identical (the same pattern the clocked chunk uses for abandoned
+    rounds, and the differential tests pin it). Invalid (padding /
+    merge-only) steps therefore still RUN the round on a zero mask and
+    discard every output; invalid merge records merge slot 0 and discard.
+
+    A valid step's fire is exactly the eager fire: broadcast/key/counter
+    advance, the dispatch group's fresh Z/W rows written into their
+    recorded table slots (exact row copies, bit-equal to the eager
+    per-group gather). Merges call the shared ``merge_contribution`` with
+    the post-fire table as the batch and the recorded slot as the batch
+    row. Step counts pad to small buckets so chunk programs compile per
+    bucket, not per step count.
+    """
+    round_fn = sim._round_fn
+    batches, loss_fn, cfg = sim._batches, sim._loss_fn, sim.cfg
+    codec, ef = sim.sim.codec, sim._ef
+    use_agg = sim.alg != "fedepm"
+
+    def chunk(state, H, tz, tw, ws, codec_key, xs):
+        def body(carry, x):
+            st, Hc, tz, tw, ws = carry
+            if use_agg:
+                new_st, rm = round_fn(st, batches, loss_fn, cfg,
+                                      mask=x["mask"], agg_mask=x["agg"])
+            else:
+                new_st, rm = round_fn(st, batches, loss_fn, cfg,
+                                      mask=x["mask"])
+            v = x["fire_valid"]
+            st2 = st._replace(
+                w_tau=tree_where(v, new_st.w_tau, st.w_tau),
+                k=jnp.where(v, new_st.k, st.k),
+                key=jnp.where(v, new_st.key, st.key))
+            # invalid steps carry slot_src == -1 everywhere: no writes
+            src = jnp.clip(x["slot_src"], 0)
+            upd = x["slot_src"] >= 0
+            tz2 = tree_where_client(
+                upd, tmap(lambda a: a[src], new_st.Z), tz)
+            tw2 = tree_where_client(
+                upd, tmap(lambda a: a[src], new_st.W), tw)
+            if collect_w_tau:
+                ws2 = tmap(
+                    lambda s, w: jax.lax.dynamic_update_index_in_dim(
+                        s, w, x["step"], 0), ws, st2.w_tau)
+                ws = tree_where(v, ws2, ws)
+
+            def mbody(mc, mx):
+                stc, Hcc = mc
+                ckey = jax.random.fold_in(codec_key, mx["serial"])
+                Z, W, Hn = merge_contribution(
+                    stc.Z, stc.W, Hcc, tz2, tw2, mx["slot"], mx["client"],
+                    mx["gamma"], ckey, codec=codec, ef=ef)
+                mv = mx["valid"]
+                stn = stc._replace(Z=tree_where(mv, Z, stc.Z),
+                                   W=tree_where(mv, W, stc.W))
+                return (stn, tree_where(mv, Hn, Hcc)), jnp.zeros((),
+                                                                 jnp.int32)
+
+            (st3, H2), _ = jax.lax.scan(mbody, (st2, Hc), x["merges"])
+            return (st3, H2, tz2, tw2, ws), rm
+
+        carry, rms = jax.lax.scan(body, (state, H, tz, tw, ws), xs)
+        return carry + (rms,)
+
+    return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4))
+
+
+def _record_replay_chunk(sim: FedSim, C: int, collect_w_tau: bool,
+                         table: _AsyncTable,
+                         w_parts: list | None) -> list[SimMetrics]:
+    """Record C async aggregation events, then replay them compiled."""
+    rec = _RecordAsyncExec(_CandStream(sim), table)
+    # contributions dispatched by an earlier EAGER phase enter the table:
+    # their gathered batch rows become table rows (exact copies), so the
+    # chunk program merges them like any recorded fire's upload
+    for _, _, kind, c in sim._events:
+        if kind == _EV_UPLOAD and c.slot < 0:
+            s = table.alloc()
+            table.z = tmap(lambda t, b: t.at[s].set(b[c.row]),
+                           table.z, c.z_batch)
+            table.w = tmap(lambda t, b: t.at[s].set(b[c.row]),
+                           table.w, c.w_batch)
+            c.slot, c.z_batch, c.w_batch = s, None, None
+
+    sim._exec = rec
+    try:
+        mets = []
+        for t in range(C):
+            rec.cur_step = t
+            mets.append(sim.step())
+    finally:
+        sim._exec = _EAGER_ASYNC_EXEC
+
+    fire_steps = {op["step"] for op in rec.ops if op["kind"] == 0}
+    entry_w = None
+    if collect_w_tau and len(fire_steps) < C:
+        # steps without a fire keep the previous broadcast: their stack
+        # rows forward-fill host-side, seeded from the chunk-entry w_tau
+        # -- fetched BEFORE the donating call consumes it
+        entry_w = np.asarray(jax.device_get(sim.state.w_tau))
+        sim.host_syncs += 1
+
+    w_np = None
+    if rec.ops:
+        cap, m = table.cap, sim.cfg.m
+        # group the flat op stream: one program step per dispatch, each
+        # carrying the merges recorded before the NEXT dispatch (a leading
+        # merge-only prefix becomes one fire-invalid step)
+        groups: list[dict] = []
+        for op in rec.ops:
+            if op["kind"] == 0:
+                groups.append({"fire": op, "merges": []})
+            else:
+                if not groups:
+                    groups.append({"fire": None, "merges": []})
+                groups[-1]["merges"].append(op)
+        n_steps = len(groups)
+        # steps run a full (possibly discarded) round each, so pad to
+        # SMALL buckets: pow2 up to 8, then multiples of 8 -- bounded
+        # recompiles, bounded padding waste
+        if n_steps <= 8:
+            n_pad = 1 << max(0, (n_steps - 1).bit_length())
+        else:
+            n_pad = -(-n_steps // 8) * 8
+        mmax = max((len(g["merges"]) for g in groups), default=0)
+        m_pad = (1 << max(0, (mmax - 1).bit_length())) if mmax else 0
+
+        fire_valid = np.zeros(n_pad, bool)
+        mask = np.zeros((n_pad, m), bool)
+        agg = np.zeros((n_pad, m), bool)
+        slot_src = np.full((n_pad, cap), -1, np.int32)
+        step = np.zeros(n_pad, np.int32)
+        mvalid = np.zeros((n_pad, m_pad), bool)
+        mslot = np.zeros((n_pad, m_pad), np.int32)
+        mclient = np.zeros((n_pad, m_pad), np.int32)
+        mserial = np.zeros((n_pad, m_pad), np.int32)
+        mgamma = np.zeros((n_pad, m_pad), np.float32)
+        last_fire = -1
+        for i, g in enumerate(groups):
+            if g["fire"] is not None:
+                op = g["fire"]
+                fire_valid[i] = True
+                mask[i] = op["mask"]
+                agg[i] = op["agg"]
+                step[i] = op["step"]
+                for s, cl in op["slots"]:
+                    slot_src[i, s] = cl
+                last_fire = i
+            for j, op in enumerate(g["merges"]):
+                mvalid[i, j] = True
+                mslot[i, j] = op["slot"]
+                mclient[i, j] = op["client"]
+                mserial[i, j] = op["serial"]
+                mgamma[i, j] = op["gamma"]
+        fn = _async_chunk_fn(sim, collect_w_tau)
+        H = sim._H if sim._ef else jnp.zeros((), jnp.float32)
+        if collect_w_tau:
+            ws0 = tmap(lambda v: jnp.zeros((C,) + v.shape, v.dtype),
+                       sim.state.w_tau)
+        else:
+            ws0 = jnp.zeros((), jnp.float32)
+        xs = {"fire_valid": jnp.asarray(fire_valid),
+              "mask": jnp.asarray(mask), "agg": jnp.asarray(agg),
+              "slot_src": jnp.asarray(slot_src), "step": jnp.asarray(step),
+              "merges": {"valid": jnp.asarray(mvalid),
+                         "slot": jnp.asarray(mslot),
+                         "client": jnp.asarray(mclient),
+                         "serial": jnp.asarray(mserial),
+                         "gamma": jnp.asarray(mgamma)}}
+        state, H, tz, tw, ws, rms = fn(sim.state, H, table.z, table.w,
+                                       ws0, sim._codec_key, xs)
+        sim.state = state
+        if sim._ef:
+            sim._H = H
+        table.z, table.w = tz, tw
+        if last_fire >= 0:
+            sim.last_round_metrics = tmap(lambda y: y[last_fire], rms)
+        if collect_w_tau:
+            w_np = np.asarray(jax.device_get(ws))
+            sim.host_syncs += 1
+
+    # in-flight table-backed contributions now reference the NEW table
+    # trees (the old ones were donated into the chunk program)
+    for _, _, kind_, c in sim._events:
+        if kind_ == _EV_UPLOAD and c.slot >= 0:
+            c.z_batch, c.w_batch, c.row = table.z, table.w, c.slot
+
+    if collect_w_tau:
+        rows, last = [], entry_w
+        for t in range(C):
+            if w_np is not None and t in fire_steps:
+                last = w_np[t]
+            rows.append(last)
+        w_parts.append(np.stack(rows))
+    return mets
+
+
+def _run_async_scan(sim: FedSim, rounds: int, *, chunk: int | None,
+                    collect_w_tau: bool,
+                    event_table_capacity: int | None) -> EngineResult:
+    chunk = rounds if chunk is None else min(chunk, rounds)
+    # donation invariant: copy the entry state once (the caller may still
+    # hold the s0 it passed to FedSim); later states are engine-owned
+    sim.state = _copy_tree(sim.state)
+    if sim._async_table is None:
+        if event_table_capacity is not None:
+            cap, fixed = int(event_table_capacity), True
+        else:
+            # capped: at most max_concurrency in flight + a buffer's worth
+            # awaiting merge; uncapped: the pump tops the system up to one
+            # cohort, so ~2 cohorts bounds it (growth covers the tail)
+            conc = sim._max_conc if math.isfinite(sim._max_conc) \
+                else 2 * sim._cohort
+            cap, fixed = int(conc) + sim._buffer_k, False
+        sim._async_table = _AsyncTable(sim.state.Z, sim.state.W,
+                                       max(1, cap), fixed=fixed)
+    table = sim._async_table
+    mets: list[SimMetrics] = []
+    w_parts: list[np.ndarray] | None = [] if collect_w_tau else None
+    done = 0
+    while done < rounds:
+        C = min(chunk, rounds - done)
+        mets += _record_replay_chunk(sim, C, collect_w_tau, table, w_parts)
+        done += C
+    return EngineResult(
+        mets, np.concatenate(w_parts) if collect_w_tau else None)
+
+
+# ---------------------------------------------------------------------------
+# client-axis mesh sharding
+# ---------------------------------------------------------------------------
+
+def _resolve_mesh(mesh):
+    """None | int | jax.sharding.Mesh -> Mesh or None.
+
+    An int builds a (data=mesh, model=1) test mesh via launch.mesh
+    (imported lazily -- the sim layer must not depend on launch at module
+    load).
+    """
+    if mesh is None or hasattr(mesh, "axis_names"):
+        return mesh
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(n_data=int(mesh), n_model=1)
+
+
+def _client_sharded(tree, m: int, mesh):
+    """device_put: leading-client-axis leaves shard over the mesh's data
+    axis (the repo's single-pod logical rule client -> data with
+    specs.leaf_spec's divisibility rails); other leaves replicate. On a
+    single-device mesh this is semantically a no-op -- which is what pins
+    sharded == unsharded bit-for-bit (tests/test_sim_invariants.py).
+    """
+    from repro.sharding.rules import single_pod_rules
+    from repro.sharding.specs import leaf_spec
+    rules = single_pod_rules()
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def put(x):
+        if getattr(x, "ndim", 0) and x.shape[0] == m:
+            spec = leaf_spec(("client",) + (None,) * (x.ndim - 1),
+                             x.shape, mesh, rules)
+            return jax.device_put(x, jax.sharding.NamedSharding(mesh, spec))
+        return jax.device_put(x, rep)
+
+    return tmap(put, tree)
+
+
+# ---------------------------------------------------------------------------
 # public entry point
 # ---------------------------------------------------------------------------
 
 def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
-               collect_w_tau: bool = False) -> EngineResult:
+               collect_w_tau: bool = False, mesh=None,
+               event_table_capacity: int | None = None) -> EngineResult:
     """Advance ``sim`` by ``rounds`` rounds via the fused scan engine.
 
     Drop-in replacement for ``sim.run(rounds)``: ``sim.state``, ``sim.t``,
@@ -320,21 +811,35 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
     memory, meant for objective evaluation on small tasks (the CLI), not
     for LM-scale states.
 
-    The async policy falls back to the eager event engine (see module
-    docstring); metrics/state are whatever that path produces.
+    The async policy runs the record/replay engine (module docstring):
+    C aggregation events record through the shared scheduling pump, then
+    replay as one compiled scan over the event table.
+    ``event_table_capacity`` (async only) pins the table size -- overflow
+    then raises instead of growing. ``mesh`` (None | int | Mesh) shards
+    the client axis of the state over the mesh's "data" axis before the
+    compiled chunks run; an int n builds an (n, 1) test mesh. A
+    single-device mesh is bit-identical to no mesh.
     """
     if rounds < 1:
         raise ValueError(f"rounds must be >= 1; got {rounds}")
+    if chunk is not None and chunk < 1:
+        raise ValueError(f"chunk must be >= 1 (None = all rounds in one "
+                         f"scan); got {chunk}")
+    if event_table_capacity is not None and event_table_capacity < 1:
+        raise ValueError(f"event_table_capacity must be >= 1; "
+                         f"got {event_table_capacity}")
+    mesh = _resolve_mesh(mesh)
+    if mesh is not None:
+        sim.state = _client_sharded(sim.state, sim.cfg.m, mesh)
+        if sim._ef:
+            sim._H = _client_sharded(sim._H, sim.cfg.m, mesh)
     if sim.sim.policy == "async":
-        mets = []
-        w_parts = [] if collect_w_tau else None
-        for _ in range(rounds):
-            mets.append(sim.step())
-            if collect_w_tau:
-                w_parts.append(np.asarray(sim.state.w_tau))
-                sim.host_syncs += 1
-        return EngineResult(
-            mets, np.stack(w_parts) if collect_w_tau else None)
+        return _run_async_scan(sim, rounds, chunk=chunk,
+                               collect_w_tau=collect_w_tau,
+                               event_table_capacity=event_table_capacity)
+    if event_table_capacity is not None:
+        raise ValueError("event_table_capacity is owned by policy='async'; "
+                         f"policy is {sim.sim.policy!r}")
     if sim.sim.policy not in _SCAN_POLICIES:
         raise ValueError(f"unknown policy {sim.sim.policy!r}")
 
@@ -347,9 +852,6 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
     sim.state = _copy_tree(sim.state)
     H = _copy_tree(sim._H) if sim._ef else jnp.zeros((), jnp.float32)
 
-    if chunk is not None and chunk < 1:
-        raise ValueError(f"chunk must be >= 1 (None = all rounds in one "
-                         f"scan); got {chunk}")
     chunk = rounds if chunk is None else min(chunk, rounds)
     out_metrics: list[SimMetrics] = []
     w_parts: list[np.ndarray] = []

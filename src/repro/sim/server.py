@@ -71,6 +71,16 @@ A cohort draw that is entirely offline leaves the algorithm state
 _MAX_DRY_DISPATCHES consecutive such draws the step gives up and reports
 abandoned=True.
 
+Both engines run this SAME event loop. All device work routes through a
+three-method executor seam (draw_candidates / fire / merge): the eager
+executor below performs it at each event, while the scan engine
+(repro.sim.engine) swaps in a recording executor that defers fires and
+merges into an op program one compiled ``lax.scan`` replays over a
+fixed-capacity payload table. Every host-side quantity -- clock, metrics,
+ledger, staleness, telemetry -- is computed by identical pump code either
+way, which is what makes scan async bit-for-bit comparable to eager
+(tests/test_engine_async.py).
+
 The mask is fed into the round via ``fedepm_round(..., mask=...)`` -- the
 selection key stream is unchanged, so with policy="sync", full availability,
 deterministic latency and no codec the simulated trajectory is BIT-FOR-BIT
@@ -86,6 +96,7 @@ has no cutoff to wait for and costs zero simulated time.)
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import functools
 import heapq
@@ -229,20 +240,34 @@ class _Contribution:
     per group (``_fire_group``); each contribution references its row of
     that shared batch instead of holding a privately sliced (1, ...) copy,
     so a g-client dispatch costs one gather per leaf, not 2g slice ops.
+
+    Under the scan engine (repro.sim.engine) the batch is the engine's
+    fixed-capacity payload TABLE instead of a per-group gather: ``slot`` is
+    the table row holding this upload, ``z_batch``/``w_batch`` point at the
+    table trees once the recording chunk has been replayed (None while the
+    upload only exists as a recorded fire op). A table IS a batch, so a
+    later eager ``step()`` merges a table-backed contribution through the
+    exact same ``merge_contribution`` path.
     """
 
     client: int
     version: int   # server version at dispatch (staleness anchor)
-    serial: int    # global upload serial (codec dither provenance)
+    serial: int    # global upload serial (codec dither stream)
     z_batch: Any   # (g_pad, ...) stacked upload rows of the dispatch group
     w_batch: Any   # (g_pad, ...) stacked iterate rows of the dispatch group
     row: int       # this client's row within the batch
+    slot: int = -1  # scan engine: payload-table row (-1 = eager batch mode)
 
 
-@functools.partial(jax.jit, static_argnames=("codec", "ef"))
-def _merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
-                        key, *, codec: CodecConfig | None, ef: bool):
-    """Fold one arrived upload into the server's stacked state.
+def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
+                       key, *, codec: CodecConfig | None, ef: bool):
+    """Fold one arrived upload into the server's stacked state (PURE).
+
+    The ONE merge/staleness function both engines call: the eager event
+    loop dispatches it through the jitted ``_merge_contribution`` wrapper
+    below, and the scan engine (repro.sim.engine) traces it directly inside
+    its compiled async chunk with the payload table as the batch -- one
+    definition, so the two paths cannot drift.
 
     ``batch_row`` selects the contribution's row out of its dispatch
     group's shared (g_pad, ...) batch (a dynamic slice, so one compiled
@@ -290,6 +315,16 @@ def _merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
             zl, new.astype(zl.dtype), idx, axis=0)
 
     return tmap(zmerge, Z, z_hat), set_row(W, w_row), H_new
+
+
+#: jitted entry point of :func:`merge_contribution` (the eager path)
+_merge_contribution = functools.partial(
+    jax.jit, static_argnames=("codec", "ef"))(merge_contribution)
+
+
+def copy_tree(tree):
+    """Fresh device copies of every leaf (donation/snapshot safety)."""
+    return tmap(lambda x: jnp.array(x, copy=True), tree)
 
 
 def client_work_flops(alg: str, *, k0: int, n_params: int, d_local: float,
@@ -354,6 +389,83 @@ def fifo_cache_get(cache: dict, key, build: Callable, *, cap: int = 64):
 
 def _shared_jit(key, build: Callable):
     return fifo_cache_get(_JIT_CACHE, key, build)
+
+
+class _EagerAsyncExec:
+    """Device-work executor behind the async event loop (the reference).
+
+    ``_pump_async`` is ONE scheduling implementation shared by both
+    engines; everything that touches a jax array routes through this
+    three-method seam. The eager executor performs the device work at the
+    event, exactly as the pre-refactor event loop did. The scan engine
+    (repro.sim.engine) swaps in a RECORDING executor that replays candidate
+    draws from a precomputed key stream and defers fires/merges into a
+    program one compiled ``lax.scan`` executes -- every host-side quantity
+    (clock, metrics, ledger, telemetry, staleness) is computed by the same
+    pump code either way, which is what makes the two engines comparable
+    event-for-event.
+    """
+
+    recording = False
+
+    def draw_candidates(self, sim) -> np.ndarray:
+        cand = np.asarray(sim._candidates(sim.state))
+        sim.host_syncs += 1
+        return cand
+
+    def fire(self, sim, group, mask: np.ndarray, contribs) -> None:
+        """Run the round function for a dispatch group NOW; gather the
+        group's upload/iterate rows into a shared batch and attach them to
+        the group's contributions."""
+        if sim._step_agg is not None:
+            # baselines: anchor eq. (34)'s mean on the whole live cohort so
+            # a capped sub-group dispatch still mixes across clients (the
+            # uncapped group IS the cohort, recovering sync exactly). The
+            # union with the group keeps the anchor non-empty even when a
+            # NEWER cohort draw came up all-offline while this group sat
+            # stalled (an empty mean would broadcast a zero vector).
+            new_state, rmetrics = sim._step_agg(
+                sim.state, sim._dev_mask(mask),
+                sim._dev_mask(sim._cohort_live | mask))
+        else:
+            new_state, rmetrics = sim._step(sim.state, sim._dev_mask(mask))
+        sim.state = sim.state._replace(
+            w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
+        sim.last_round_metrics = rmetrics
+        # one gather per leaf for the whole group's upload/iterate rows
+        # (vs 2 slice ops per CLIENT); indices pad to the next power of two
+        # (repeating the last) so _merge_contribution compiles per pow2
+        # bucket, not per group size
+        idx = np.fromiter((i for i, _ in group), np.int64, len(group))
+        pad = 1 << (len(group) - 1).bit_length() if len(group) > 1 else 1
+        rows = jnp.asarray(np.concatenate(
+            [idx, np.full(pad - len(group), idx[-1], np.int64)]))
+        z_batch = tmap(lambda x: x[rows], new_state.Z)
+        w_batch = tmap(lambda x: x[rows], new_state.W)
+        for j, c in enumerate(contribs):
+            c.z_batch, c.w_batch, c.row = z_batch, w_batch, j
+
+    def merge(self, sim, c: "_Contribution", staleness: int,
+              gamma: float) -> None:
+        """Staleness-merge one arrived contribution into the server state."""
+        key = jax.random.fold_in(sim._codec_key, c.serial)
+        Z, W, H = _merge_contribution(
+            sim.state.Z, sim.state.W, sim._H, c.z_batch, c.w_batch,
+            jnp.asarray(c.row, jnp.int32),
+            jnp.asarray(c.client, jnp.int32),
+            jnp.asarray(gamma, jnp.float32), key,
+            codec=sim.sim.codec, ef=sim._ef)
+        sim.state = sim.state._replace(Z=Z, W=W)
+        sim._H = H
+        if c.slot >= 0 and sim._async_table is not None:
+            # table-backed contribution (dispatched under the scan engine,
+            # merged eagerly): its payload slot is free again
+            sim._async_table.free(c.slot)
+            c.slot = -1
+
+
+#: shared stateless default executor (the eager reference semantics)
+_EAGER_ASYNC_EXEC = _EagerAsyncExec()
 
 
 class FedSim:
@@ -513,6 +625,8 @@ class FedSim:
             self._n_inflight = 0       # started clients awaiting arrival
             self._n_queued_starts = 0  # start events sitting in the heap
             self._cohort_live = np.zeros(cfg.m, bool)  # newest draw, live
+            self._exec = _EAGER_ASYNC_EXEC  # device-work executor seam
+            self._async_table = None   # scan engine's payload table
 
         self._work = work_flops if work_flops is not None else \
             client_work_flops(alg, k0=cfg.k0,
@@ -693,8 +807,7 @@ class FedSim:
         never occupy a concurrency slot. The live mask is remembered as the
         aggregation anchor the baselines' agg_mask hook receives.
         """
-        candidates = np.asarray(self._candidates(self.state))
-        self.host_syncs += 1
+        candidates = self._exec.draw_candidates(self)
         durations = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
@@ -744,21 +857,16 @@ class FedSim:
         mask[[i for i, _ in group]] = True
         self._ev_contacted += len(group)
         self._ev_down += mask.astype(np.int64)
-        if self._step_agg is not None:
-            # baselines: anchor eq. (34)'s mean on the whole live cohort so
-            # a capped sub-group dispatch still mixes across clients (the
-            # uncapped group IS the cohort, recovering sync exactly). The
-            # union with the group keeps the anchor non-empty even when a
-            # NEWER cohort draw came up all-offline while this group sat
-            # stalled (an empty mean would broadcast a zero vector).
-            new_state, rmetrics = self._step_agg(
-                self.state, self._dev_mask(mask),
-                self._dev_mask(self._cohort_live | mask))
-        else:
-            new_state, rmetrics = self._step(self.state, self._dev_mask(mask))
-        self.state = self.state._replace(
-            w_tau=new_state.w_tau, k=new_state.k, key=new_state.key)
-        self.last_round_metrics = rmetrics
+        contribs = [
+            _Contribution(client=i, version=self._version,
+                          serial=self._serial + j, z_batch=None,
+                          w_batch=None, row=j)
+            for j, (i, _) in enumerate(group)]
+        self._serial += len(group)
+        # device work (round fn + row gather) routes through the executor:
+        # the eager executor runs it now, the scan engine's recording
+        # executor defers it into the compiled chunk program
+        self._exec.fire(self, group, mask, contribs)
         self._n_inflight += len(group)
         if self.telemetry.enabled:
             for i, dur in group:
@@ -767,24 +875,10 @@ class FedSim:
                     client=int(i), dur_s=float(dur), version=self._version,
                     in_flight=self._n_inflight,
                     stalled=len(self._stalled))
-        # one gather per leaf for the whole group's upload/iterate rows
-        # (vs 2 slice ops per CLIENT); indices pad to the next power of two
-        # (repeating the last) so _merge_contribution compiles per pow2
-        # bucket, not per group size
-        idx = np.fromiter((i for i, _ in group), np.int64, len(group))
-        pad = 1 << (len(group) - 1).bit_length() if len(group) > 1 else 1
-        rows = jnp.asarray(np.concatenate(
-            [idx, np.full(pad - len(group), idx[-1], np.int64)]))
-        z_batch = tmap(lambda x: x[rows], new_state.Z)
-        w_batch = tmap(lambda x: x[rows], new_state.W)
-        for j, (i, dur) in enumerate(group):
-            c = _Contribution(
-                client=i, version=self._version, serial=self._serial,
-                z_batch=z_batch, w_batch=w_batch, row=j)
+        for (i, dur), c in zip(group, contribs):
             heapq.heappush(self._events,
                            (self.t + dur, self._eseq, _EV_UPLOAD, c))
             self._eseq += 1
-            self._serial += 1
 
     def _step_async(self) -> SimMetrics:
         """One aggregation event: pump the per-client event queue until the
@@ -858,15 +952,7 @@ class FedSim:
         staleness = [self._version - c.version for c in buffer]
         for c, s in zip(buffer, staleness):
             gamma = participation.staleness_weight(s, self.sim.staleness_exp)
-            key = jax.random.fold_in(self._codec_key, c.serial)
-            Z, W, H = _merge_contribution(
-                self.state.Z, self.state.W, self._H, c.z_batch, c.w_batch,
-                jnp.asarray(c.row, jnp.int32),
-                jnp.asarray(c.client, jnp.int32),
-                jnp.asarray(gamma, jnp.float32), key,
-                codec=self.sim.codec, ef=self._ef)
-            self.state = self.state._replace(Z=Z, W=W)
-            self._H = H
+            self._exec.merge(self, c, s, gamma)
             if self.telemetry.enabled:
                 if self.sim.codec is not None:
                     self.telemetry.event(
@@ -900,3 +986,89 @@ class FedSim:
 
     def run(self, rounds: int) -> list[SimMetrics]:
         return [self.step() for _ in range(rounds)]
+
+    # -- exact rewind (scan-engine termination replay) ----------------------
+
+    def snapshot(self) -> dict:
+        """Deep copy of EVERYTHING a later :meth:`restore` needs to replay
+        the simulation bit-for-bit from this point: algorithm state and
+        codec memory (fresh device buffers, so chunk donation cannot
+        invalidate them), the host RNG stream, the clock/round counters,
+        the byte ledger, the telemetry stream position, and -- under the
+        async policy -- the whole event-loop state (heap, stalled FIFO,
+        payload table). The snapshot stays valid across multiple restores.
+        """
+        snap = {
+            "state": copy_tree(self.state),
+            "H": None if self._H is None else copy_tree(self._H),
+            "rng": copy.deepcopy(self._rng.bit_generator.state),
+            "t": self.t,
+            "round_idx": self.round_idx,
+            "n_metrics": len(self.metrics),
+            "last_rm": self.last_round_metrics,
+            "host_syncs": self.host_syncs,
+            "ledger": self.ledger.checkpoint(),
+            "tel_mark": self.telemetry.mark(),
+        }
+        if self.sim.policy == "adaptive":
+            snap["ewma"] = self.deadlines.ewma.copy()
+        if self.sim.policy == "async":
+            snap["async"] = {
+                "version": self._version,
+                "serial": self._serial,
+                "eseq": self._eseq,
+                # upload payloads are MUTABLE (the executor rewrites their
+                # batch refs), so each gets its own shallow copy; start
+                # payloads are immutable (client, duration) tuples
+                "events": [
+                    (t, seq, kind,
+                     dataclasses.replace(p) if kind == _EV_UPLOAD else p)
+                    for (t, seq, kind, p) in self._events],
+                "stalled": collections.deque(self._stalled),
+                "n_inflight": self._n_inflight,
+                "n_queued_starts": self._n_queued_starts,
+                "cohort_live": self._cohort_live.copy(),
+                "table": None if self._async_table is None
+                else self._async_table.clone(),
+            }
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Rewind to a :meth:`snapshot`; the snapshot remains reusable
+        (everything mutable is copied again on the way out)."""
+        self.state = copy_tree(snap["state"])
+        self._H = None if snap["H"] is None else copy_tree(snap["H"])
+        self._rng.bit_generator.state = copy.deepcopy(snap["rng"])
+        self.t = snap["t"]
+        self.round_idx = snap["round_idx"]
+        del self.metrics[snap["n_metrics"]:]
+        self.last_round_metrics = snap["last_rm"]
+        self.host_syncs = snap["host_syncs"]
+        self.ledger.restore(snap["ledger"])
+        self.telemetry.rewind(snap["tel_mark"])
+        if self.sim.policy == "adaptive":
+            self.deadlines.ewma = snap["ewma"].copy()
+        if self.sim.policy == "async":
+            a = snap["async"]
+            self._version = a["version"]
+            self._serial = a["serial"]
+            self._eseq = a["eseq"]
+            self._events = [
+                (t, seq, kind,
+                 dataclasses.replace(p) if kind == _EV_UPLOAD else p)
+                for (t, seq, kind, p) in a["events"]]
+            self._stalled = collections.deque(a["stalled"])
+            self._n_inflight = a["n_inflight"]
+            self._n_queued_starts = a["n_queued_starts"]
+            self._cohort_live = a["cohort_live"].copy()
+            table = a["table"]
+            self._async_table = None if table is None else table.clone()
+            if self._async_table is not None:
+                # table-backed contributions must reference THIS restore's
+                # table clone (the snapshot-time arrays may have been
+                # donated into a later chunk before the rewind)
+                for _, _, kind, p in self._events:
+                    if kind == _EV_UPLOAD and p.slot >= 0:
+                        p.z_batch = self._async_table.z
+                        p.w_batch = self._async_table.w
+                        p.row = p.slot

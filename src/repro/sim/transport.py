@@ -308,6 +308,27 @@ class ByteLedger:
         return LedgerSnapshot(up_i=self._tot_up_i, down_i=self._tot_down_i,
                               up_f=self._tot_up_f, down_f=self._tot_down_f)
 
+    def checkpoint(self) -> dict:
+        """Deep copy of the FULL ledger state (per-client arrays, totals,
+        round records) -- the rewind anchor ``FedSim.snapshot()`` takes so a
+        scan chunk that overshoots a termination rule can be replayed
+        exactly. Unlike :meth:`snapshot`, this is O(m + rounds)."""
+        return {"up_i": self._up_i.copy(), "down_i": self._down_i.copy(),
+                "up_f": self._up_f.copy(), "down_f": self._down_f.copy(),
+                "tot": (self._tot_up_i, self._tot_down_i,
+                        self._tot_up_f, self._tot_down_f),
+                "rounds": [dict(r) for r in self.rounds]}
+
+    def restore(self, chk: dict) -> None:
+        """Rewind to a :meth:`checkpoint` (the checkpoint stays reusable)."""
+        self._up_i = chk["up_i"].copy()
+        self._down_i = chk["down_i"].copy()
+        self._up_f = chk["up_f"].copy()
+        self._down_f = chk["down_f"].copy()
+        (self._tot_up_i, self._tot_down_i,
+         self._tot_up_f, self._tot_down_f) = chk["tot"]
+        self.rounds = [dict(r) for r in chk["rounds"]]
+
     def delta(self, since: LedgerSnapshot) -> dict:
         """Bytes moved since ``since`` -- exact on the integer paths."""
         return {"up": float((self._tot_up_i - since.up_i)

@@ -162,18 +162,20 @@ class RunHandle:
 
     # -- the execution loop --------------------------------------------------
 
-    def _terminated(self, f_hist: list) -> bool:
+    def _terminated(self, f_hist: list, *, w, metrics) -> bool:
         # the paper's variance criterion fires spuriously on a flat start
         # (abandoned rounds leave f_hist at f(w0)): require history AND at
-        # least one aggregated round before trusting it
+        # least one aggregated round before trusting it. ``w``/``metrics``
+        # are the broadcast point and SimMetrics prefix AS OF the round
+        # being tested, so the scan engine can evaluate the rule
+        # mid-chunk with exactly the eager loop's inputs.
         if not self.spec.engine.terminate or len(f_hist) < 8:
             return False
-        if not any(not mm.abandoned for mm in self.sim.metrics):
+        if not any(not mm.abandoned for mm in metrics):
             return False
         from repro.configs.paper_logreg import termination_reached
         return termination_reached(
-            f_hist, float(self._gsq(self.sim.state.w_tau)),
-            self.data.n_features)
+            f_hist, float(self._gsq(w)), self.data.n_features)
 
     def run(self, report: Callable | None = None) -> dict:
         """Execute the spec's engine for its round budget -> summary dict.
@@ -210,27 +212,55 @@ class RunHandle:
                     f_hist.append(float(self._fobj(sim.state.w_tau)))
                     if report is not None:
                         report(met, f_hist[-1])
-                    if self._terminated(f_hist):
+                    if self._terminated(f_hist, w=sim.state.w_tau,
+                                        metrics=sim.metrics):
                         break
             else:                        # scan: fused multi-round chunks
                 collect = self._w_stackable
                 chunk = eng.chunk if eng.chunk is not None \
                     else (8 if eng.terminate else eng.rounds)
-                while rounds_run < eng.rounds:
+                check = eng.terminate and collect
+                stopped = False
+                while rounds_run < eng.rounds and not stopped:
                     todo = min(chunk, eng.rounds - rounds_run)
-                    res = run_rounds(sim, todo, collect_w_tau=collect)
+                    # --terminate parity: snapshot before the chunk so an
+                    # overshooting chunk can roll back (state, RNG, clock,
+                    # ledger, telemetry) and re-run exactly the rounds the
+                    # eager loop would have -- the stopping round is
+                    # decided from the chunk's per-round broadcast stream
+                    snap = sim.snapshot() if check else None
+                    res = run_rounds(sim, todo, collect_w_tau=collect,
+                                     mesh=eng.mesh,
+                                     event_table_capacity=(
+                                         eng.event_table_capacity))
                     if collect:
-                        for met, w in zip(res.metrics, res.w_tau):
-                            f_hist.append(float(self._fobj(jnp.asarray(w))))
+                        for i, (met, w) in enumerate(
+                                zip(res.metrics, res.w_tau)):
+                            w = jnp.asarray(w)
+                            f_hist.append(float(self._fobj(w)))
                             if report is not None:
                                 report(met, f_hist[-1])
+                            if check and self._terminated(
+                                    f_hist, w=w,
+                                    metrics=sim.metrics[:rounds_run + i
+                                                        + 1]):
+                                keep = i + 1
+                                if keep < todo:
+                                    sim.restore(snap)
+                                    run_rounds(
+                                        sim, keep, collect_w_tau=False,
+                                        mesh=eng.mesh,
+                                        event_table_capacity=(
+                                            eng.event_table_capacity))
+                                rounds_run += keep
+                                stopped = True
+                                break
                     else:
                         for met in res.metrics:
                             if report is not None:
                                 report(met, None)
-                    rounds_run += todo
-                    if self._terminated(f_hist):
-                        break
+                    if not stopped:
+                        rounds_run += todo
         summary = self._summary(f_hist, rounds_run)
         if tel.enabled:
             from repro.telemetry import (telemetry_summary,

@@ -287,7 +287,8 @@ class EngineEntry(NamedTuple):
 
 ENGINES: dict[str, EngineEntry] = {
     "eager": EngineEntry(frozenset(), None),
-    "scan": EngineEntry(frozenset({"chunk"}), None),
+    "scan": EngineEntry(frozenset({"chunk", "mesh",
+                                   "event_table_capacity"}), None),
 }
 
 
@@ -451,11 +452,19 @@ def _validate_engine(spec: ExperimentSpec) -> None:
              f"registered: {sorted(ENGINES)}")
     _require(eng.rounds >= 1,
              f"[engine] rounds must be >= 1; got {eng.rounds}")
-    if eng.chunk is not None:
-        _require("chunk" in ENGINES[eng.name].knobs,
-                 f"[engine] 'chunk' does not apply to engine {eng.name!r}")
-        _require(eng.chunk >= 1,
-                 f"[engine] chunk must be >= 1; got {eng.chunk}")
+    for knob in ("chunk", "mesh", "event_table_capacity"):
+        val = getattr(eng, knob)
+        if val is None:
+            continue
+        _require(knob in ENGINES[eng.name].knobs,
+                 f"[engine] {knob!r} does not apply to engine {eng.name!r}")
+        _require(val >= 1,
+                 f"[engine] {knob} must be >= 1; got {val}")
+    if eng.event_table_capacity is not None:
+        _require(spec.policy.name == "async",
+                 "[engine] event_table_capacity sizes the async engine's "
+                 "in-flight payload table; policy is "
+                 f"{spec.policy.name!r}")
     if eng.terminate:
         _require(spec.task.kind == "logreg",
                  "[engine] terminate uses the paper's logreg variance "

@@ -204,13 +204,21 @@ class EngineSpec:
     into one donated lax.scan; bit-identical trajectory). ``chunk`` bounds
     rounds per compiled scan (scan-only knob; None = the documented
     default). ``terminate`` applies the paper's variance stopping rule
-    (logreg tasks only -- the rule is calibrated for that objective).
+    (logreg tasks only -- the rule is calibrated for that objective);
+    under scan it stops at exactly the eager stopping round via
+    snapshot/rollback at chunk granularity. ``mesh`` shards the stacked
+    client axis over that many devices (scan-only; None = unsharded; a
+    1-device mesh is bit-identical to unsharded). ``event_table_capacity``
+    pins the scan async engine's in-flight payload table to a fixed slot
+    count (scan + async only; overflow is an error instead of growth).
     """
 
     name: str = "eager"
     rounds: int = 30
     chunk: int | None = None
     terminate: bool = False
+    mesh: int | None = None
+    event_table_capacity: int | None = None
 
 
 # ---------------------------------------------------------------------------

@@ -77,6 +77,12 @@ class NullRecorder:
               client: int | None = None, **attrs) -> None:
         pass
 
+    def mark(self) -> int:
+        return 0
+
+    def rewind(self, mark: int) -> None:
+        pass
+
 
 #: the shared default recorder every FedSim starts with
 NULL_RECORDER = NullRecorder()
@@ -108,3 +114,22 @@ class EventRecorder:
                    attrs={k: _scalar(v) for k, v in attrs.items()})
         self.events.append(ev)
         self.registry.observe(ev)
+
+    def mark(self) -> int:
+        """Position in the event stream, for :meth:`rewind`."""
+        return len(self.events)
+
+    def rewind(self, mark: int) -> None:
+        """Truncate the stream back to ``mark`` and rebuild the registry.
+
+        Used by the scan engine's termination replay: a chunk that
+        overshoots the stopping round is rolled back and re-run, and the
+        overshot rounds' events must vanish with it so the stream equals an
+        eager run that stopped at the same round. The registry is derived
+        state, so it is rebuilt by re-observing the surviving prefix.
+        """
+        from repro.telemetry.metrics import MetricsRegistry
+        del self.events[mark:]
+        self.registry = MetricsRegistry()
+        for ev in self.events:
+            self.registry.observe(ev)

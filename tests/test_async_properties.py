@@ -1,0 +1,78 @@
+"""Property-based sweep of the async event loop (optional: hypothesis).
+
+Skipped wholesale when hypothesis is not installed -- the SAME property
+checkers run deterministically over a fixed grid in
+test_engine_async.py::test_async_event_loop_properties, so tier-1 keeps
+coverage either way. With hypothesis available, this module widens the
+grid to randomly drawn (buffer_size, max_concurrency, staleness_exp,
+seed) corners and asserts, per draw:
+
+  * upload arrivals pop in the order a reference heapq of (finish time,
+    dispatch sequence) would pop them;
+  * the in-flight upload count never exceeds max_concurrency;
+  * the byte ledger balances: running totals == per-event metric sums ==
+    per-client row sums;
+  * the scan engine's staleness histogram (from the telemetry merge
+    stream) equals the eager loop's, and both account for every
+    aggregated contribution.
+
+Draws are kept small (5 aggregation events on the shared module task)
+because the trajectory itself is exercised elsewhere; these tests buy
+breadth over the event-interleaving knobs, not depth.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.sim import run_rounds  # noqa: E402
+from repro.telemetry.events import EventRecorder  # noqa: E402
+
+from test_engine_async import (  # noqa: E402
+    build_async,
+    check_inflight_never_exceeds_cap,
+    check_ledger_balances,
+    check_pop_order_matches_heapq,
+    staleness_histogram,
+    task,  # noqa: F401  (module-scoped fixture, reused by @given tests)
+)
+
+_knobs = st.fixed_dictionaries({
+    "buffer_size": st.integers(min_value=2, max_value=6),
+    "max_concurrency": st.sampled_from([0, 2, 3, 5, 8]),
+    "staleness_exp": st.sampled_from([0.0, 0.5, 1.0, 2.0]),
+})
+
+_settings = settings(max_examples=10, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+@_settings
+@given(kw=_knobs, seed=st.integers(min_value=0, max_value=31))
+def test_event_loop_properties_hold(task, kw, seed):  # noqa: F811
+    kw = {k: v for k, v in kw.items() if v != 0}
+    eager = build_async(task, kw, seed=seed)
+    eager.attach_telemetry(EventRecorder())
+    eager.run(5)
+    assert check_pop_order_matches_heapq(eager.telemetry.events) > 0
+    check_inflight_never_exceeds_cap(eager.telemetry.events,
+                                     kw.get("max_concurrency"))
+    check_ledger_balances(eager)
+
+
+@_settings
+@given(kw=_knobs, seed=st.integers(min_value=0, max_value=31),
+       chunk=st.sampled_from([1, 2, 3, 5]))
+def test_staleness_histogram_engine_invariant(task, kw, seed, chunk):  # noqa: F811
+    kw = {k: v for k, v in kw.items() if v != 0}
+    eager = build_async(task, kw, seed=seed)
+    scan = build_async(task, kw, seed=seed)
+    eager.attach_telemetry(EventRecorder())
+    scan.attach_telemetry(EventRecorder())
+    eager.run(5)
+    run_rounds(scan, 5, chunk=chunk)
+    h = staleness_histogram(eager.telemetry.events)
+    assert h == staleness_histogram(scan.telemetry.events)
+    assert sum(h.values()) == sum(m.n_aggregated for m in eager.metrics)
+    check_ledger_balances(scan)

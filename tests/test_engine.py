@@ -355,3 +355,16 @@ def test_bench_engine_quick_schema(tmp_path):
     assert b["speedup_rounds_per_sec"] >= 1.0
     assert b["engines"]["scan"]["host_syncs"] < \
         b["engines"]["eager"]["host_syncs"]
+    # async cell: record/replay scan vs eager event loop, same schema
+    # minus the objective race (trajectories are bit-identical)
+    a = b["async"]
+    assert a["config"]["policy"] == "async"
+    for name in ("eager", "scan"):
+        e = a["engines"][name]
+        for field in ("rounds_per_sec", "host_syncs",
+                      "host_syncs_per_round"):
+            assert field in e, (name, field)
+        assert e["rounds_per_sec"] > 0
+    assert a["speedup_rounds_per_sec"] >= 1.0
+    assert a["engines"]["scan"]["host_syncs"] < \
+        a["engines"]["eager"]["host_syncs"]

@@ -1,0 +1,378 @@
+"""Differential harness for the scan-compiled ASYNC engine.
+
+The async policy is host-driven (event heap, staleness bookkeeping,
+adaptive cutoffs), so the scan engine runs it in two passes: a recording
+pass executes the SAME event-loop pump as the eager engine against a
+fixed-capacity payload table, then one jitted ``lax.scan`` replays every
+dispatch and staleness-masked merge on device (repro.sim.engine's module
+docstring has the layout). This file pins the replay to the eager loop
+bit-for-bit -- not allclose -- across the knobs that change the event
+interleaving:
+
+  * buffer size (aggregation trigger) and max_concurrency, including a
+    cap SMALLER than the refill draw so one dispatch splits across
+    slot-release instants;
+  * the unset-cap cell (whole cohorts dispatch in one round call);
+  * staleness exponent 0 (gamma = 1, exact-replace merge branch) and a
+    steep exponent (deep blend);
+  * memoryless and error-feedback codecs (EF threads residuals through
+    the payload table);
+  * all three algorithms (fedepm, sfedavg, sfedprox);
+  * chunk boundaries -- every dispatch its own chunk, uneven chunks,
+    repeated run_rounds calls -- which must be invisible;
+  * a pinned event_table_capacity (fixed slots, overflow = error);
+  * telemetry: the scan engine's recording pass must emit the EXACT event
+    stream (every Event tuple) the eager loop does;
+  * --terminate through the CLI: identical summaries, including the
+    stopping round, via snapshot/rollback at chunk granularity.
+
+Also here: deterministic event-loop property checks shared with the
+hypothesis sweep in test_async_properties.py (heap pop order, in-flight
+cap, ledger balance, staleness histogram).
+"""
+import heapq
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, fedepm
+from repro.core.tasks import make_logistic_loss
+from repro.data import synth
+from repro.data.partition import partition_iid
+from repro.launch import simulate
+from repro.sim import CodecConfig, FedSim, SimConfig, make_profiles, run_rounds
+from repro.telemetry.events import EventRecorder
+
+M = 16
+N = 14
+
+
+@pytest.fixture(scope="module")
+def task():
+    X, y = synth.adult_like(d=2000, n=N, seed=0)
+    batches = jax.tree_util.tree_map(jnp.asarray,
+                                     partition_iid(X, y, m=M, seed=0))
+    return batches, make_logistic_loss()
+
+
+def build_async(task, kw, *, alg="fedepm", codec=None, eps=0.1, seed=9,
+                availability=0.9):
+    """One async FedSim on the shared logreg task (module-level so the
+    hypothesis property sweep can reuse it)."""
+    batches, loss = task
+    if alg == "fedepm":
+        cfg = fedepm.FedEPMConfig.paper_defaults(
+            m=M, rho=0.5, k0=2, eps_dp=eps, sensitivity_clip=1.0)
+        s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    else:
+        cfg = baselines.BaselineConfig(m=M, k0=2, rho=0.5, eps_dp=eps)
+        s0 = baselines.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    sim_cfg = SimConfig(policy="async", latency="pareto", latency_alpha=1.3,
+                        seed=seed, codec=codec, **kw)
+    return FedSim(alg=alg, cfg=cfg, state=s0, batches=batches, loss_fn=loss,
+                  profiles=make_profiles(M, seed=5,
+                                         availability=availability),
+                  sim=sim_cfg)
+
+
+def _assert_bitforbit(eager: FedSim, scan: FedSim):
+    for name, a, b in zip(eager.state._fields, scan.state, eager.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"state leaf {name!r} diverged"
+    assert scan.t == eager.t
+    assert scan.round_idx == eager.round_idx
+    assert scan.metrics == eager.metrics
+    assert scan.ledger.total_up == eager.ledger.total_up
+    assert scan.ledger.total_down == eager.ledger.total_down
+    np.testing.assert_array_equal(scan.ledger.up, eager.ledger.up)
+    np.testing.assert_array_equal(scan.ledger.down, eager.ledger.down)
+
+
+# ---------------------------------------------------------------------------
+# the knob sweep: scan == eager, bit for bit
+# ---------------------------------------------------------------------------
+
+# (id, alg, SimConfig kwargs, error_feedback (None = no codec), chunk)
+CASES = [
+    ("buf4-cap5", "fedepm",
+     {"buffer_size": 4, "max_concurrency": 5}, None, None),
+    ("small-buffer", "fedepm",
+     {"buffer_size": 2, "max_concurrency": 5}, None, 2),
+    ("big-buffer", "fedepm",
+     {"buffer_size": 6, "max_concurrency": 8}, None, 3),
+    # cap < refill draw: a single selection's dispatch splits across
+    # slot-release instants, exercising the stalled FIFO + partial fires
+    ("cap-splits-dispatch", "fedepm",
+     {"buffer_size": 3, "max_concurrency": 2}, None, None),
+    ("uncapped", "fedepm",
+     {"buffer_size": 3}, None, 2),
+    # staleness_exp = 0 -> gamma = 1 exactly -> the merge's exact-replace
+    # branch; 2.0 -> steep down-weighting of stale contributions
+    ("stale-exp0", "fedepm",
+     {"buffer_size": 3, "max_concurrency": 4, "staleness_exp": 0.0},
+     None, None),
+    ("stale-exp2", "fedepm",
+     {"buffer_size": 3, "max_concurrency": 4, "staleness_exp": 2.0},
+     None, 3),
+    ("codec-memoryless", "fedepm",
+     {"buffer_size": 3, "max_concurrency": 4}, False, None),
+    ("codec-ef", "fedepm",
+     {"buffer_size": 3, "max_concurrency": 4}, True, 3),
+    ("sfedavg", "sfedavg",
+     {"buffer_size": 3, "max_concurrency": 4}, None, None),
+    ("sfedprox", "sfedprox",
+     {"buffer_size": 3, "max_concurrency": 4}, None, 2),
+]
+
+
+@pytest.mark.parametrize("alg,kw,ef,chunk", [c[1:] for c in CASES],
+                         ids=[c[0] for c in CASES])
+def test_async_scan_matches_eager_bitforbit(task, alg, kw, ef, chunk):
+    """6 aggregation events under a heterogeneous, partially-available
+    Pareto fleet with DP noise on: the replayed scan trajectory (state
+    leaves, key, clock, metrics incl. staleness stats, per-client ledger
+    rows) is the eager event loop's, exactly."""
+    codec = None if ef is None else CodecConfig(topk_frac=0.5, bits=8,
+                                                error_feedback=ef)
+    eager = build_async(task, kw, alg=alg, codec=codec)
+    scan = build_async(task, kw, alg=alg, codec=codec)
+    eager.run(6)
+    res = run_rounds(scan, 6, chunk=chunk)
+    assert len(res.metrics) == 6
+    assert any(m.staleness_max > 0 for m in eager.metrics), \
+        "scenario produced no stale merges -- sweep lost its teeth"
+    _assert_bitforbit(eager, scan)
+    if ef:
+        for a, b in zip(jax.tree_util.tree_leaves(eager._H),
+                        jax.tree_util.tree_leaves(scan._H)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_chunk_boundaries_invisible(task):
+    """chunk=1 (every aggregation event its own compiled chunk), uneven
+    chunks, and back-to-back run_rounds calls all land on the same
+    trajectory as 7 eager events."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    eager = build_async(task, kw)
+    eager.run(7)
+    for chunks in ([(7, 1)], [(3, 2), (4, 3)], [(2, None), (5, 2)]):
+        scan = build_async(task, kw)
+        for rounds, chunk in chunks:
+            run_rounds(scan, rounds, chunk=chunk)
+        _assert_bitforbit(eager, scan)
+
+
+def test_async_collect_w_tau_stream(task):
+    """collect_w_tau returns each aggregation event's broadcast point --
+    the exact states an eager run passes through."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    eager = build_async(task, kw)
+    scan = build_async(task, kw)
+    res = run_rounds(scan, 4, chunk=2, collect_w_tau=True)
+    assert res.w_tau.shape[0] == 4
+    for t in range(4):
+        eager.step()
+        np.testing.assert_array_equal(res.w_tau[t],
+                                      np.asarray(eager.state.w_tau))
+
+
+def test_async_engine_interop(task):
+    """Eager and scan legs interleave freely on one sim: the event-loop
+    state (heap, stalled FIFO, RNG, payload slots) hands off exactly."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    eager = build_async(task, kw)
+    mixed = build_async(task, kw)
+    eager.run(8)
+    mixed.run(2)
+    run_rounds(mixed, 3)
+    mixed.run(2)
+    run_rounds(mixed, 1)
+    _assert_bitforbit(eager, mixed)
+
+
+# ---------------------------------------------------------------------------
+# event-table capacity + mesh knobs
+# ---------------------------------------------------------------------------
+
+def test_event_table_capacity_pinned(task):
+    """A sufficient pinned capacity is trajectory-neutral; an insufficient
+    one is an ERROR (the fixed table refuses to grow), naming the knob."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    eager = build_async(task, kw)
+    scan = build_async(task, kw)
+    eager.run(4)
+    run_rounds(scan, 4, event_table_capacity=8)
+    _assert_bitforbit(eager, scan)
+
+    tiny = build_async(task, kw)
+    with pytest.raises(ValueError, match="event_table_capacity"):
+        run_rounds(tiny, 4, event_table_capacity=1)
+
+
+def test_async_mesh_single_device_bitidentical(task):
+    """A 1-device mesh shards the client axis trivially; the trajectory
+    must be bit-identical to the unsharded run (and hence to eager)."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    plain = build_async(task, kw)
+    sharded = build_async(task, kw)
+    run_rounds(plain, 5, chunk=2)
+    run_rounds(sharded, 5, chunk=2, mesh=1)
+    _assert_bitforbit(plain, sharded)
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the recording pass reproduces the eager event stream exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ef", [None, True], ids=["plain", "codec-ef"])
+def test_async_telemetry_event_stream_equal(task, ef):
+    """Every telemetry Event -- kind, simulated timestamp, round, client,
+    attrs (dur_s, version, in_flight, stalled, staleness, gamma, codec
+    bytes, ledger totals) -- is identical between engines, element for
+    element. The scan engine's recording pass IS the eager pump, so the
+    stream equality is by construction; this pins it."""
+    codec = None if ef is None else CodecConfig(topk_frac=0.5, bits=8,
+                                                error_feedback=True)
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    eager = build_async(task, kw, codec=codec)
+    scan = build_async(task, kw, codec=codec)
+    eager.attach_telemetry(EventRecorder())
+    scan.attach_telemetry(EventRecorder())
+    eager.run(5)
+    run_rounds(scan, 5, chunk=2)
+    assert len(eager.telemetry.events) > 0
+    assert scan.telemetry.events == eager.telemetry.events
+    kinds = {ev.kind for ev in eager.telemetry.events}
+    assert {"round_start", "dispatch", "upload_arrival",
+            "merge"} <= kinds
+
+
+# ---------------------------------------------------------------------------
+# --terminate parity through the CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli_async(tmp_path, engine, rounds, extra=()):
+    p = tmp_path / f"{engine}.json"
+    rc = simulate.main([
+        "--alg", "fedepm", "--aggregation", "async",
+        "--buffer-size", "3", "--max-concurrency", "4",
+        "--latency", "pareto", "--engine", engine,
+        "--m", "8", "--d", "1000", "--rounds", str(rounds),
+        "--seed", "3", "--quiet", "--json", str(p), *extra])
+    assert rc == 0
+    return json.loads(p.read_text())
+
+
+def test_cli_terminate_parity_async(tmp_path):
+    """--terminate under --engine scan stops at EXACTLY the eager
+    stopping round (snapshot/rollback at chunk granularity) and the whole
+    summary -- f_final, rounds, simulated time, byte totals, staleness
+    stats -- matches field for field."""
+    a = _run_cli_async(tmp_path, "eager", 120, ("--terminate",))
+    b = _run_cli_async(tmp_path, "scan", 120, ("--terminate",))
+    assert a.pop("engine") == "eager" and b.pop("engine") == "scan"
+    assert a["rounds"] < 120, \
+        "termination never fired -- the parity check is vacuous"
+    assert a == b
+
+
+def test_cli_async_scan_matches_eager(tmp_path):
+    """Fixed-budget async CLI runs: identical summaries."""
+    a = _run_cli_async(tmp_path, "eager", 4)
+    b = _run_cli_async(tmp_path, "scan", 4)
+    assert a.pop("engine") == "eager" and b.pop("engine") == "scan"
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# event-loop properties (deterministic grid; hypothesis sweep reuses these
+# helpers from test_async_properties.py)
+# ---------------------------------------------------------------------------
+
+def check_pop_order_matches_heapq(events):
+    """Upload arrivals must pop in (finish time, dispatch order) order --
+    i.e. the engine's event queue behaves as the reference heapq: replay
+    the stream, pushing each live dispatch's finish instant and popping on
+    each arrival."""
+    heap, seq, checked = [], 0, 0
+    for ev in events:
+        if ev.kind == "dispatch" and ev.attrs.get("live", True):
+            heapq.heappush(heap, (ev.ts + ev.attrs["dur_s"], seq, ev.client))
+            seq += 1
+        elif ev.kind == "upload_arrival":
+            t_fin, _, client = heapq.heappop(heap)
+            assert client == ev.client, \
+                f"arrival order diverged from heapq reference at #{checked}"
+            assert ev.ts == t_fin
+            checked += 1
+    assert checked > 0
+    return checked
+
+
+def check_inflight_never_exceeds_cap(events, cap):
+    """The dispatcher never holds more than max_concurrency uploads in
+    flight (both the engine's own counter and an independent recount).
+    Dispatch events of one fired group all carry the post-group total, so
+    the recount matches it exactly at the group's last event and bounds it
+    from below inside the group; arrivals match exactly."""
+    inflight = 0
+    for ev in events:
+        if ev.kind == "dispatch" and ev.attrs.get("live", True):
+            inflight += 1
+            assert inflight <= ev.attrs["in_flight"]
+        elif ev.kind == "upload_arrival":
+            inflight -= 1
+            assert inflight == ev.attrs["in_flight"]
+        else:
+            continue
+        if cap:
+            assert inflight <= cap and ev.attrs["in_flight"] <= cap
+    assert inflight >= 0
+
+
+def check_ledger_balances(sim):
+    """The ledger's running totals equal the per-event metrics' sums and
+    the per-client rows' sums -- every recorded byte is accounted once."""
+    assert sim.ledger.total_up == sum(m.bytes_up for m in sim.metrics)
+    assert sim.ledger.total_down == sum(m.bytes_down for m in sim.metrics)
+    assert sim.ledger.total_up == int(np.sum(sim.ledger.up))
+    assert sim.ledger.total_down == int(np.sum(sim.ledger.down))
+
+
+def staleness_histogram(events):
+    """Histogram {staleness -> merge count} from the telemetry stream."""
+    hist: dict[int, int] = {}
+    for ev in events:
+        if ev.kind == "merge":
+            s = int(ev.attrs["staleness"])
+            hist[s] = hist.get(s, 0) + 1
+    return hist
+
+
+PROP_GRID = [
+    ("capped", {"buffer_size": 3, "max_concurrency": 4}),
+    ("tight-cap", {"buffer_size": 4, "max_concurrency": 2}),
+    ("uncapped", {"buffer_size": 3}),
+]
+
+
+@pytest.mark.parametrize("kw", [g[1] for g in PROP_GRID],
+                         ids=[g[0] for g in PROP_GRID])
+def test_async_event_loop_properties(task, kw):
+    eager = build_async(task, kw, seed=11)
+    scan = build_async(task, kw, seed=11)
+    eager.attach_telemetry(EventRecorder())
+    scan.attach_telemetry(EventRecorder())
+    eager.run(5)
+    run_rounds(scan, 5, chunk=2)
+    assert check_pop_order_matches_heapq(eager.telemetry.events) > 0
+    check_inflight_never_exceeds_cap(eager.telemetry.events,
+                                     kw.get("max_concurrency"))
+    check_ledger_balances(eager)
+    check_ledger_balances(scan)
+    h = staleness_histogram(eager.telemetry.events)
+    assert h == staleness_histogram(scan.telemetry.events)
+    assert sum(h.values()) == sum(m.n_aggregated for m in eager.metrics)

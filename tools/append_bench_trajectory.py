@@ -14,7 +14,15 @@ Schema:
              "eager_rounds_per_sec": ..., "scan_rounds_per_sec": ...,
              "speedup_rounds_per_sec": ..., "speedup_wall_to_target": ...,
              "eager_wall_to_target_s": ..., "scan_wall_to_target_s": ...,
-             "rounds_to_target": ..., "target_objective": ...}, ...]}
+             "rounds_to_target": ..., "target_objective": ...,
+             "async_eager_rounds_per_sec": ...,
+             "async_scan_rounds_per_sec": ...,
+             "async_speedup_rounds_per_sec": ...}, ...]}
+
+The async_* fields mirror the summary's ``"async"`` block (the
+record/replay scan engine vs the eager event loop) and are omitted from
+rows distilled from pre-async BENCH_engine.json files, so old history
+rows stay valid.
 
 Rows are keyed by ``label`` (CI passes the PR/branch name); re-running a
 label replaces its row in place, keeping the file one-row-per-PR.
@@ -41,7 +49,7 @@ def row_from_engine(summary: dict, label: str) -> dict:
     """Distill one BENCH_engine.json summary into a trajectory row."""
     cfg = summary["config"]
     eager, scan = summary["engines"]["eager"], summary["engines"]["scan"]
-    return {
+    row = {
         "label": label,
         "backend": cfg["backend"],
         "d": cfg["d"], "m": cfg["m"], "rounds": cfg["rounds"],
@@ -54,6 +62,16 @@ def row_from_engine(summary: dict, label: str) -> dict:
         "rounds_to_target": scan["rounds_to_target"],
         "target_objective": summary["target_objective"],
     }
+    if "async" in summary:
+        a = summary["async"]
+        row.update({
+            "async_eager_rounds_per_sec":
+                a["engines"]["eager"]["rounds_per_sec"],
+            "async_scan_rounds_per_sec":
+                a["engines"]["scan"]["rounds_per_sec"],
+            "async_speedup_rounds_per_sec": a["speedup_rounds_per_sec"],
+        })
+    return row
 
 
 def append(engine_json: Path, out: Path, label: str) -> dict:

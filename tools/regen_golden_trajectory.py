@@ -1,13 +1,23 @@
 #!/usr/bin/env python3
-"""Regenerate tests/fixtures/golden_sync_trajectory.npz.
+"""Regenerate the golden trajectory fixtures under tests/fixtures/.
 
-The fixture pins 2 rounds of the SYNC simulation (deterministic latency,
-heterogeneous profiles, DP noise ON) on the reduced paper logreg task:
-per-round global objective, cumulative simulated clock, the first 8
-coordinates of the broadcast point w_tau, and the final PRNG key /
-iteration counter. tests/test_sim_invariants.py diffs every future server
-refactor against this stored trajectory, so regressions show up even when
-a refactor stays self-consistent.
+golden_sync_trajectory.npz pins 2 rounds of the SYNC simulation
+(deterministic latency, heterogeneous profiles, DP noise ON) on the
+reduced paper logreg task: per-round global objective, cumulative
+simulated clock, the first 8 coordinates of the broadcast point w_tau,
+and the final PRNG key / iteration counter.
+
+golden_async_trajectory.npz pins 4 aggregation events of the ASYNC
+simulation at its hairiest: concurrency-capped dispatch, error-feedback
+codec, trace-resampled fleet (tests/fixtures/device_trace.csv) -- plus
+the byte-ledger totals. ``simulate_golden_async`` takes an ``engine``
+argument so the regression test diffs BOTH the eager event loop and the
+scan record/replay engine (run as 2 chunks) against the same stored
+trajectory.
+
+tests/test_sim_invariants.py diffs every future server refactor against
+these stored trajectories, so regressions show up even when a refactor
+stays self-consistent.
 
 ONLY regenerate after a DELIBERATE semantic change to the round math or
 the sim's timing model, and say why in the commit:
@@ -28,9 +38,13 @@ from repro.core.tasks import make_logistic_loss
 from repro.data import synth
 from repro.data.partition import partition_iid
 from repro.sim import FedSim, SimConfig, make_profiles
+from repro.sim.clients import LatencyTrace
+from repro.sim.transport import CodecConfig
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 OUT = ROOT / "tests" / "fixtures" / "golden_sync_trajectory.npz"
+OUT_ASYNC = ROOT / "tests" / "fixtures" / "golden_async_trajectory.npz"
+TRACE_CSV = ROOT / "tests" / "fixtures" / "device_trace.csv"
 
 # frozen scenario -- changing ANY of these invalidates the fixture
 M = 16
@@ -70,11 +84,79 @@ def simulate_golden() -> dict[str, np.ndarray]:
     }
 
 
+# frozen async scenario (golden_async_trajectory.npz)
+ASYNC_ROUNDS = 4      # aggregation events
+ASYNC_CHUNK = 2       # scan engine replays the run as 2 chunks
+
+
+def simulate_golden_async(engine: str = "eager") -> dict[str, np.ndarray]:
+    """Run the frozen async scenario -> trajectory arrays.
+
+    ``engine`` is "eager" (per-event loop) or "scan" (record/replay in
+    ASYNC_CHUNK-event chunks); both must reproduce the SAME stored
+    arrays bit-for-bit (tests/test_sim_invariants.py).
+    """
+    X, y = synth.adult_like(d=D, n=N, seed=SEED)
+    batches = jax.tree_util.tree_map(
+        jnp.asarray, partition_iid(X, y, m=M, seed=SEED))
+    loss = make_logistic_loss()
+    cfg = fedepm.FedEPMConfig.paper_defaults(
+        m=M, rho=0.5, k0=4, eps_dp=0.1, sensitivity_clip=1.0)
+    s0 = fedepm.init_state(jax.random.PRNGKey(SEED), jnp.zeros(N), cfg)
+    sim = FedSim(
+        alg="fedepm", cfg=cfg, state=s0, batches=batches, loss_fn=loss,
+        profiles=LatencyTrace.load(TRACE_CSV).sample_profiles(
+            M, seed=PROFILE_SEED),
+        sim=SimConfig(policy="async", latency="pareto", latency_alpha=1.3,
+                      seed=SEED, buffer_size=3, max_concurrency=4,
+                      codec=CodecConfig(topk_frac=0.5, bits=8,
+                                        error_feedback=True)))
+    objective, t_total, w_head = [], [], []
+
+    def observe(m):
+        objective.append(
+            float(fedepm.global_objective(loss, sim.state.w_tau, batches)))
+        t_total.append(m.t_total)
+        w_head.append(np.asarray(sim.state.w_tau)[:HEAD].copy())
+
+    if engine == "eager":
+        for _ in range(ASYNC_ROUNDS):
+            observe(sim.step())
+    else:
+        from repro.sim.engine import run_rounds
+        done = 0
+        while done < ASYNC_ROUNDS:
+            todo = min(ASYNC_CHUNK, ASYNC_ROUNDS - done)
+            res = run_rounds(sim, todo, collect_w_tau=True)
+            for m, w in zip(res.metrics, res.w_tau):
+                w = jnp.asarray(w)
+                objective.append(
+                    float(fedepm.global_objective(loss, w, batches)))
+                t_total.append(m.t_total)
+                w_head.append(np.asarray(w)[:HEAD].copy())
+            done += todo
+    return {
+        "objective": np.asarray(objective, np.float64),
+        "t_total": np.asarray(t_total, np.float64),
+        "w_tau_head": np.stack(w_head),
+        "key_final": np.asarray(sim.state.key),
+        "k_final": np.asarray(int(sim.state.k)),
+        "ledger_up": np.asarray(sim.ledger.total_up, np.float64),
+        "ledger_down": np.asarray(sim.ledger.total_down, np.float64),
+    }
+
+
 def main() -> int:
     arrays = simulate_golden()
     OUT.parent.mkdir(parents=True, exist_ok=True)
     np.savez(OUT, **arrays)
     print(f"wrote {OUT.relative_to(ROOT)}")
+    for k, v in arrays.items():
+        print(f"  {k:12s} shape={np.shape(v)} "
+              f"{np.asarray(v).ravel()[:4]}")
+    arrays = simulate_golden_async()
+    np.savez(OUT_ASYNC, **arrays)
+    print(f"wrote {OUT_ASYNC.relative_to(ROOT)}")
     for k, v in arrays.items():
         print(f"  {k:12s} shape={np.shape(v)} "
               f"{np.asarray(v).ravel()[:4]}")
