@@ -40,9 +40,13 @@ round math is microseconds and scan wins by the dispatch factor; at the
 paper's full d=45222 (--full) rounds are compute-bound and the gap narrows
 toward 1 -- both regimes are the point (docs/perf.md).
 
-The scenario is ONE declarative spec cell (repro.spec); each timed arm
+Each scenario is ONE declarative spec cell (repro.spec); each timed arm
 builds a fresh sim from it through the same ``spec.build()`` path the
-CLI uses.
+CLI uses. The two cells (sync, async) execute through the multi-cell
+sweep driver (repro.launch.sweep_run) under :func:`run_bench_cell` --
+sequentially by default, because the arms time wall-clock and would
+contend if run concurrently; ``--sweep-dir`` persists the per-cell
+results (resumable) and writes the merged artifact there.
 """
 from __future__ import annotations
 
@@ -62,22 +66,56 @@ from repro.spec.build import task_data
 
 QUICK_KW = dict(d=2000, m=16, k0=4, rounds=120, repeats=3)
 
+BENCH_RUNNER = "benchmarks.bench_engine:run_bench_cell"
+
+
+def _cells(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
+           n: int = 14, rounds: int = 60, seed: int = 0):
+    """The two benchmark scenarios as declarative spec cells.
+
+    ONE cell describes each scenario; the timed arms build fresh sims
+    from it (the spec layer's task memo keeps the batches device-resident
+    and the jit caches warm across builds, so the timed regions measure
+    dispatch, not re-tracing)."""
+    task = xspec.TaskSpec(kind="logreg", d=d, n=n, m=m)
+    alg = xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0, eps_dp=0.0)
+    engine = xspec.EngineSpec(name="eager", rounds=rounds)
+    sync_cell = xspec.ExperimentSpec(
+        name="bench-engine", seed=seed, task=task, algorithm=alg,
+        fleet=xspec.FleetSpec(kind="uniform"),
+        policy=xspec.PolicySpec(name="sync"),
+        engine=engine).validate()
+    async_cell = xspec.ExperimentSpec(
+        name="bench-engine/async", seed=seed, task=task, algorithm=alg,
+        fleet=xspec.FleetSpec(kind="synthetic", availability=0.9,
+                              latency="pareto", latency_alpha=1.3),
+        policy=xspec.PolicySpec(name="async", buffer_size=4,
+                                max_concurrency=6),
+        engine=engine).validate()
+    return sync_cell, async_cell
+
+
+def run_bench_cell(spec, ctx) -> dict:
+    """Sweep-driver runner: time one benchmark cell (sync or async arm).
+
+    ``ctx["repeats"]`` sets the median-of-N repeat count; the arm is
+    picked off ``spec.policy.name``."""
+    repeats = int(ctx.get("repeats", 3))
+    if spec.policy.name == "async":
+        return _bench_async(spec, repeats)
+    return _bench_sync(spec, repeats)
+
 
 def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
           n: int = 14, rounds: int = 60, repeats: int = 3,
           seed: int = 0) -> dict:
-    # ONE declarative cell describes the benchmark scenario; both timed
-    # engines build fresh sims from it (the spec layer's task memo keeps
-    # the batches device-resident and the jit caches warm across builds,
-    # so the timed regions measure dispatch, not re-tracing)
-    cell = xspec.ExperimentSpec(
-        name="bench-engine", seed=seed,
-        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
-        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
-                                      eps_dp=0.0),
-        fleet=xspec.FleetSpec(kind="uniform"),
-        policy=xspec.PolicySpec(name="sync"),
-        engine=xspec.EngineSpec(name="eager", rounds=rounds)).validate()
+    return _bench_sync(_cells(d=d, m=m, k0=k0, rho=rho, n=n,
+                              rounds=rounds, seed=seed)[0], repeats)
+
+
+def _bench_sync(cell, repeats: int) -> dict:
+    t, alg = cell.task, cell.algorithm
+    d, m, n, rounds = t.d, t.m, t.n, cell.engine.rounds
     data = task_data(cell)
     loss, batches = data.loss_fn, data.batches
     mk = lambda: cell.build().sim  # noqa: E731
@@ -155,8 +193,8 @@ def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
 
     return {
         "config": {"task": "paper_logreg", "policy": "sync", "d": d, "m": m,
-                   "k0": k0, "rho": rho, "n": n, "rounds": rounds,
-                   "repeats": repeats, "seed": seed,
+                   "k0": alg.k0, "rho": alg.rho, "n": n, "rounds": rounds,
+                   "repeats": repeats, "seed": cell.seed,
                    "backend": jax.default_backend()},
         "engines": {"eager": eng(eager_rps, eager_wall, er, eager_syncs),
                     "scan": eng(scan_rps, scan_wall, sr, scan_syncs)},
@@ -169,21 +207,18 @@ def bench(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
 def bench_async(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
                 n: int = 14, rounds: int = 60, repeats: int = 3,
                 seed: int = 0) -> dict:
+    return _bench_async(_cells(d=d, m=m, k0=k0, rho=rho, n=n,
+                               rounds=rounds, seed=seed)[1], repeats)
+
+
+def _bench_async(cell, repeats: int) -> dict:
     """The async cell: eager event loop vs record/replay scan engine.
 
-    Same declarative-cell discipline as :func:`bench`; no objective race
+    Same declarative-cell discipline as the sync arm; no objective race
     (the trajectories are bit-identical -- tests/test_engine_async.py --
     so rounds/sec is the whole story)."""
-    cell = xspec.ExperimentSpec(
-        name="bench-engine/async", seed=seed,
-        task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
-        algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
-                                      eps_dp=0.0),
-        fleet=xspec.FleetSpec(kind="synthetic", availability=0.9,
-                              latency="pareto", latency_alpha=1.3),
-        policy=xspec.PolicySpec(name="async", buffer_size=4,
-                                max_concurrency=6),
-        engine=xspec.EngineSpec(name="eager", rounds=rounds)).validate()
+    t, alg = cell.task, cell.algorithm
+    rounds = cell.engine.rounds
     mk = lambda: cell.build().sim  # noqa: E731
 
     mk().run(2)                                   # warm the eager programs
@@ -211,10 +246,12 @@ def bench_async(d: int = 4000, m: int = 50, k0: int = 8, rho: float = 0.5,
                     statistics.median(syncs) / rounds}
 
     return {
-        "config": {"task": "paper_logreg", "policy": "async", "d": d,
-                   "m": m, "k0": k0, "rho": rho, "n": n, "rounds": rounds,
-                   "buffer_size": 4, "max_concurrency": 6,
-                   "repeats": repeats, "seed": seed,
+        "config": {"task": "paper_logreg", "policy": "async", "d": t.d,
+                   "m": t.m, "k0": alg.k0, "rho": alg.rho, "n": t.n,
+                   "rounds": rounds,
+                   "buffer_size": cell.policy.buffer_size,
+                   "max_concurrency": cell.policy.max_concurrency,
+                   "repeats": repeats, "seed": cell.seed,
                    "backend": jax.default_backend()},
         "engines": {"eager": eng(eager_rps, eager_syncs),
                     "scan": eng(scan_rps, scan_syncs)},
@@ -251,11 +288,41 @@ def rows_from(summary: dict) -> list:
     return rows
 
 
+def summarize(*, repeats: int = 3, jobs: int = 1, sweep_dir=None,
+              **kw) -> dict:
+    """Run both arms through the sweep driver -> BENCH_engine.json dict.
+
+    Each arm executes as one driver cell under :func:`run_bench_cell`
+    (atomic per-cell result file; a ``sweep_dir`` makes a killed run
+    resumable and writes ``merged.json`` there). ``jobs`` defaults to 1:
+    the arms are wall-clock timings, and running them concurrently would
+    contend for the CPU they measure.
+    """
+    from repro.launch.sweep_run import execute_cells, write_merged
+    cells = list(_cells(**kw))
+    import pathlib
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        out_dir = sweep_dir if sweep_dir is not None else tmp
+        res = execute_cells(cells, out_dir=out_dir, jobs=jobs,
+                            runner=BENCH_RUNNER,
+                            ctx={"repeats": int(repeats)})
+        if not res.ok:
+            bad = res.failed or res.pending
+            raise RuntimeError(
+                f"bench-engine sweep incomplete: failed={res.failed} "
+                f"pending={res.pending} (first: {bad[0]})")
+        if sweep_dir is not None:
+            write_merged(pathlib.Path(sweep_dir) / "merged.json", cells,
+                         res.records, meta={"name": "bench-engine"})
+    summary = dict(res.records["bench-engine"]["summary"])
+    summary["async"] = res.records["bench-engine/async"]["summary"]
+    return summary
+
+
 def run(**kw) -> list:
     """benchmarks/run.py entry point: CSV rows."""
-    summary = bench(**kw)
-    summary["async"] = bench_async(**kw)
-    return rows_from(summary)
+    return rows_from(summarize(**kw))
 
 
 def export_trace(trace_out, *, jax_profile_dir=None, policy: str = "sync",
@@ -301,6 +368,9 @@ def main(argv=None):
                     help="reduced task, short budget (CI smoke)")
     ap.add_argument("--full", action="store_true",
                     help="the paper's full d=45222 task (compute-bound)")
+    ap.add_argument("--sweep-dir", default=None,
+                    help="persistent sweep state dir (resumable; also "
+                         "writes merged.json there)")
     ap.add_argument("--json", default=None,
                     help="write the summary dict (BENCH_engine.json schema) "
                          "to this path")
@@ -316,8 +386,7 @@ def main(argv=None):
                          "for a real wall-time trace under DIR")
     args = ap.parse_args(argv)
     kw = QUICK_KW if args.quick else (dict(d=45222) if args.full else {})
-    summary = bench(**kw)
-    summary["async"] = bench_async(**kw)
+    summary = summarize(**kw, sweep_dir=args.sweep_dir)
     for r in rows_from(summary):
         print(",".join(map(str, r)))
     if args.json:

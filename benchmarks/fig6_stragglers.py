@@ -14,17 +14,23 @@ sync's simulated time at (near-)identical byte cost.
 The grid is a LIST OF EXPERIMENT SPECS (repro.spec, docs/spec.md):
 ``grid()`` sweeps one declarative base cell over algorithm x policy (the
 deadline cell's cutoff calibrated per algorithm) and every cell executes
-through the same ``spec.build()`` path the simulate CLI uses. Cells share
-one device copy of the task data via the spec layer's task memo.
+through the multi-cell sweep driver (repro.launch.sweep_run): parallel
+across ``jobs`` local processes, one atomic result file per cell (a
+killed run resumes under ``sweep_dir``), the paper's termination rule
+applied by ``RunHandle.run`` via ``engine.terminate``. The rows are pure
+functions of the driver's per-cell summaries.
 
 Rows: fig6/<alg>/<policy>/time,<sim_seconds * 1e6>,<derived>.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+
 import numpy as np
 
 from repro import spec as xspec
-from repro.configs.paper_logreg import termination_reached
 from repro.sim import (
     client_work_flops,
     make_latency_model,
@@ -35,6 +41,9 @@ from repro.sim import (
 
 POLICIES = ("sync", "deadline", "overselect")
 ALGS = ("fedepm", "sfedavg")
+
+# the one quick/smoke profile, shared by `--quick` and benchmarks/run.py
+QUICK_KW = dict(d=4000, m=16, rounds=30)
 
 
 def _calibrate_deadline(profiles, latency_kind, alpha, work, down_b, up_b,
@@ -60,7 +69,8 @@ def grid(*, d, m, k0, rho, rounds, n, seed, alpha,
         algorithm=xspec.AlgorithmSpec(name="fedepm", rho=rho, k0=k0,
                                       eps_dp=0.0),
         fleet=xspec.FleetSpec(latency="pareto", latency_alpha=alpha),
-        engine=xspec.EngineSpec(name="eager", rounds=rounds))
+        engine=xspec.EngineSpec(name="eager", rounds=rounds,
+                                terminate=True))
     cells = []
     for alg in ALGS:
         policies = [
@@ -68,13 +78,17 @@ def grid(*, d, m, k0, rho, rounds, n, seed, alpha,
             xspec.PolicySpec(name="deadline", deadline=deadlines[alg]),
             xspec.PolicySpec(name="overselect", overselect_factor=1.5),
         ]
-        cells += xspec.sweep(base.replace(**{"algorithm.name": alg}),
-                             {"policy": policies})
+        cells += xspec.sweep(
+            base.replace(**{"algorithm.name": alg, "name": f"fig6/{alg}"}),
+            {"policy": policies})
     return cells
 
 
 def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
-        rounds: int = 80, n: int = 14, seed: int = 0, alpha: float = 1.2):
+        rounds: int = 80, n: int = 14, seed: int = 0, alpha: float = 1.2,
+        jobs: int = 1, sweep_dir=None):
+    from repro.launch.sweep_run import execute_cells, write_merged
+
     profiles = make_profiles(m, seed=seed)
     # the broadcast w tree (float32, as the sim holds it)
     down_b = float(tree_client_bytes(np.zeros(n, np.float32)))
@@ -88,34 +102,37 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
             down_b, down_b)
         for alg in ALGS}
 
+    cells = grid(d=d, m=m, k0=k0, rho=rho, rounds=rounds, n=n,
+                 seed=seed, alpha=alpha, deadlines=deadlines)
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        out_dir = sweep_dir if sweep_dir is not None else tmp
+        res = execute_cells(cells, out_dir=out_dir, jobs=jobs)
+        if not res.ok:
+            bad = res.failed or res.pending
+            raise RuntimeError(f"fig6 sweep incomplete: "
+                               f"failed={res.failed} pending={res.pending}"
+                               f" (first: {bad[0]})")
+        if sweep_dir is not None:
+            import pathlib
+            write_merged(pathlib.Path(sweep_dir) / "merged.json", cells,
+                         res.records, meta={"name": "fig6"})
+
     rows = []
     results: dict[tuple, dict] = {}
-    for cell in grid(d=d, m=m, k0=k0, rho=rho, rounds=rounds, n=n,
-                     seed=seed, alpha=alpha, deadlines=deadlines):
+    for cell in cells:
         alg, policy = cell.algorithm.name, cell.policy.name
-        handle = cell.build()
-        sim = handle.sim
-        f_hist: list[float] = []
-        for _ in range(rounds):
-            sim.step()
-            f_hist.append(float(handle.objective(sim.state.w_tau)))
-            # the paper's variance criterion fires spuriously on the
-            # flat first rounds (w_tau barely moves while uploads warm
-            # up, especially under heavy drops) -- require a real
-            # history before trusting it
-            if len(f_hist) >= 8 and termination_reached(
-                    f_hist, float(handle.grad_sq_norm(sim.state.w_tau)), n):
-                break
-        res = {
-            "f": f_hist[-1] / m, "rounds": len(f_hist),
-            "sim_time": sim.t, "bytes": sim.ledger.total,
-            "dropped": sum(mm.n_dropped for mm in sim.metrics),
+        s = res.records[cell.name]["summary"]
+        res_c = {
+            "f": s["f_final"], "rounds": s["rounds"],
+            "sim_time": s["sim_time_s"], "bytes": s["bytes_total"],
+            "dropped": s["stragglers_dropped"],
         }
-        results[(alg, policy)] = res
+        results[(alg, policy)] = res_c
         rows.append((
-            f"fig6/{alg}/{policy}/time", res["sim_time"] * 1e6,
-            f"f={res['f']:.5f};rounds={res['rounds']};"
-            f"bytes={res['bytes']:.0f};dropped={res['dropped']}"))
+            f"fig6/{alg}/{policy}/time", res_c["sim_time"] * 1e6,
+            f"f={res_c['f']:.5f};rounds={res_c['rounds']};"
+            f"bytes={res_c['bytes']:.0f};dropped={res_c['dropped']}"))
 
     # headline: straggler mitigation beats sync on simulated wall-clock at
     # (near-)equal objective; value is the SPEEDUP FACTOR (>1 = faster)
@@ -136,6 +153,29 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Fig. 6: straggler-policy benchmark grid")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced fleet + short round budget (CI smoke)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="sweep-driver worker processes")
+    ap.add_argument("--sweep-dir", default=None,
+                    help="persistent sweep state dir (resumable; also "
+                         "writes merged.json there)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows as JSON records to this path")
+    args = ap.parse_args(argv)
+    kw = QUICK_KW if args.quick else {}
+    rows = run(**kw, jobs=args.jobs, sweep_dir=args.sweep_dir)
+    for r in rows:
         print(",".join(map(str, r)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": a, "value": b, "derived": c}
+                       for a, b, c in rows], f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,10 +27,15 @@ Two experiments on the paper logreg task under a heavy-tail (Pareto) fleet:
    async-vs-sync speedup is comparable across algorithms.
 
 Every cell is a declarative :class:`repro.spec.ExperimentSpec` (the
-``_cell`` helper varies one base spec per experiment; docs/spec.md), built
-and executed through the same ``spec.build()`` path as the simulate CLI --
-the race loops below only drive ``handle.sim`` and read
-``handle.objective``.
+``_cell`` helper varies one base spec per experiment; docs/spec.md), and
+the grid executes through the multi-cell sweep driver
+(repro.launch.sweep_run; parallel across ``jobs`` processes, resumable
+under ``sweep_dir``) in two phases: the fixed-budget cells (sync
+references, codec-bias runs) run first under the driver's default
+runner, their summaries fix the per-cell objective targets, and the
+time-to-target race cells run second under :func:`race_cell` with those
+targets in the per-cell driver context. The rows are pure functions of
+the per-cell summaries.
 
 Rows: fig7/<policy>/time_to_target,<sim_seconds * 1e6>,<derived>
       fig7/async/speedup_vs_sync,<factor>
@@ -81,23 +86,40 @@ def _calibrate_deadline(profiles, alpha, work, down_b, up_b, q: float = 0.8,
     return float(np.quantile(t[np.isfinite(t)], q))
 
 
-def _race(handle, m, f_target: float, max_events: int):
-    """-> (sim seconds to first f <= f_target, events used, final f)."""
+def race_cell(spec, ctx) -> dict:
+    """Sweep-driver runner for the time-to-target race cells.
+
+    ``ctx["f_target"]`` (per-cell driver context, set from a phase-1 sync
+    summary) is the objective the cell must reach; ``spec.engine.rounds``
+    is the event budget. The summary records the first simulated time at
+    which f <= f_target (``t_hit`` None when never reached).
+    """
+    handle = spec.build()
     sim = handle.sim
+    m = spec.task.m
+    f_target = ctx["f_target"]
     t_hit = None
     f = math.inf
-    for _ in range(max_events):
+    for _ in range(spec.engine.rounds):
         sim.step()
         f = float(handle.objective(sim.state.w_tau)) / m
-        if t_hit is None and f <= f_target:
-            t_hit = sim.t
+        if f <= f_target:
+            t_hit = float(sim.t)
             break
-    return t_hit, sim.round_idx, f
+    return {"policy": spec.policy.name, "f_target": float(f_target),
+            "t_hit": t_hit, "f": f, "events": int(sim.round_idx),
+            "sim_time_s": float(sim.t),
+            "bytes_total": float(sim.ledger.total),
+            "bytes_up": float(sim.ledger.total_up),
+            "staleness_max": int(max(
+                (mm.staleness_max for mm in sim.metrics), default=0))}
 
 
 def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         rounds: int = 60, n: int = 14, seed: int = 0, alpha: float = 1.2,
-        trace_file=TRACE_CSV):
+        trace_file=TRACE_CSV, jobs: int = 1, sweep_dir=None):
+    from repro.launch.sweep_run import execute_cells, write_merged
+
     base = xspec.ExperimentSpec(
         name="fig7", seed=seed,
         task=xspec.TaskSpec(kind="logreg", d=d, n=n, m=m),
@@ -106,15 +128,18 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         fleet=xspec.FleetSpec(latency="pareto", latency_alpha=alpha),
         engine=xspec.EngineSpec(name="eager", rounds=rounds))
 
-    def _cell(policy_name, *, alg="fedepm", fleet=None, codec=None, **knobs):
+    def _cell(policy_name, *, alg="fedepm", name=None, fleet=None,
+              codec=None, cell_rounds=None, **knobs):
         cell = base.replace(**{
-            "name": f"fig7/{alg}/{policy_name}",
+            "name": name or f"fig7/{alg}/{policy_name}",
             "algorithm.name": alg,
             "policy": xspec.PolicySpec(name=policy_name, **knobs)})
         if fleet is not None:
             cell = cell.replace(fleet=fleet)
         if codec is not None:
             cell = cell.replace(codec=codec)
+        if cell_rounds is not None:
+            cell = cell.replace(**{"engine.rounds": cell_rounds})
         return cell.validate()
 
     profiles = make_profiles(m, seed=seed)
@@ -123,33 +148,92 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
     deadline = _calibrate_deadline(profiles, alpha, work, down_b, down_b)
     cohort = max(1, round(rho * m))
     buffer_k = max(1, cohort // 2)
-
-    def fobj_m(handle):
-        return float(handle.objective(handle.sim.state.w_tau)) / m
-
-    # -- 1. uncompressed time-to-target race -------------------------------
-    sync = _cell("sync").build()
-    for _ in range(rounds):
-        sync.sim.step()
-    f_target = fobj_m(sync)
-
-    rows = [(f"fig7/sync/time_to_target", sync.sim.t * 1e6,
-             f"f_target={f_target:.6f};rounds={rounds}")]
-    times = {"sync": sync.sim.t}
-    # generous event budgets: one async event does buffer_k/cohort of a
+    cap = max(1, cohort // 2)
+    # fixed codec-bias budget: async events doing one sync budget's work
+    async_events = math.ceil(rounds * cohort / buffer_k)
+    # generous race budgets: one async event does buffer_k/cohort of a
     # round's work; a deadline round drops stragglers and may need extras
     budgets = {"deadline": rounds * 3,
                "async": math.ceil(rounds * 3 * cohort / buffer_k)}
-    cells = {"deadline": _cell("deadline", deadline=deadline),
-             "async": _cell("async", buffer_size=buffer_k)}
+    trace_fleet = xspec.FleetSpec(kind="trace", trace_file=str(trace_file),
+                                  latency="pareto", latency_alpha=alpha)
+    codec_kw = dict(topk_frac=0.25, bits=8)
+
+    # phase 1 -- fixed-budget cells (default runner): the sync references
+    # whose endpoints become the race targets, plus the codec-bias runs
+    fixed = [
+        _cell("sync"),
+        _cell("async", name="fig7/fedepm/async/raw",
+              buffer_size=buffer_k, cell_rounds=async_events),
+        _cell("async", name="fig7/fedepm/async/codec-memoryless",
+              buffer_size=buffer_k, cell_rounds=async_events,
+              codec=xspec.CodecSpec(error_feedback=False, **codec_kw)),
+        _cell("async", name="fig7/fedepm/async/codec-ef",
+              buffer_size=buffer_k, cell_rounds=async_events,
+              codec=xspec.CodecSpec(error_feedback=True, **codec_kw)),
+        _cell("sync", name="fig7/trace/fedepm/sync", fleet=trace_fleet),
+        _cell("sync", alg="sfedavg", name="fig7/trace/sfedavg/sync",
+              fleet=trace_fleet),
+    ]
+    # phase 2 -- time-to-target races (race_cell runner), each fed its
+    # phase-1 objective target through the per-cell driver context
+    races = [
+        _cell("deadline", deadline=deadline,
+              cell_rounds=budgets["deadline"]),
+        _cell("async", buffer_size=buffer_k,
+              cell_rounds=budgets["async"]),
+        _cell("async", name="fig7/trace/fedepm/async", fleet=trace_fleet,
+              buffer_size=buffer_k, max_concurrency=cap,
+              cell_rounds=budgets["async"]),
+        _cell("async", alg="sfedavg", name="fig7/trace/sfedavg/async",
+              fleet=trace_fleet, buffer_size=buffer_k,
+              max_concurrency=cap, cell_rounds=budgets["async"]),
+    ]
+
+    def _check(res, phase):
+        if not res.ok:
+            bad = res.failed or res.pending
+            raise RuntimeError(f"fig7 {phase} sweep incomplete: "
+                               f"failed={res.failed} "
+                               f"pending={res.pending} (first: {bad[0]})")
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        out_dir = sweep_dir if sweep_dir is not None else tmp
+        res1 = execute_cells(fixed, out_dir=out_dir, jobs=jobs)
+        _check(res1, "fixed")
+        s1 = {nm: rec["summary"] for nm, rec in res1.records.items()}
+        f_target = s1["fig7/fedepm/sync"]["f_final"]
+        cell_ctx = {
+            "fig7/fedepm/deadline": {"f_target": f_target},
+            "fig7/fedepm/async": {"f_target": f_target},
+            "fig7/trace/fedepm/async":
+                {"f_target": s1["fig7/trace/fedepm/sync"]["f_final"]},
+            "fig7/trace/sfedavg/async":
+                {"f_target": s1["fig7/trace/sfedavg/sync"]["f_final"]},
+        }
+        res2 = execute_cells(races, out_dir=out_dir, jobs=jobs,
+                             runner="benchmarks.fig7_async:race_cell",
+                             cell_ctx=cell_ctx)
+        _check(res2, "race")
+        s2 = {nm: rec["summary"] for nm, rec in res2.records.items()}
+        if sweep_dir is not None:
+            write_merged(pathlib.Path(sweep_dir) / "merged.json",
+                         fixed + races, {**res1.records, **res2.records},
+                         meta={"name": "fig7"})
+
+    # -- 1. uncompressed time-to-target race -------------------------------
+    sync_t = s1["fig7/fedepm/sync"]["sim_time_s"]
+    rows = [("fig7/sync/time_to_target", sync_t * 1e6,
+             f"f_target={f_target:.6f};rounds={rounds}")]
+    times = {"sync": sync_t}
     for policy in ("deadline", "async"):
-        handle = cells[policy].build()
-        t_hit, events, f = _race(handle, m, f_target, budgets[policy])
-        times[policy] = t_hit
+        r = s2[f"fig7/fedepm/{policy}"]
+        t_hit = times[policy] = r["t_hit"]
         extra = ""
         if policy == "async":
             extra = (f";buffer={buffer_k};staleness_max="
-                     f"{max(mm.staleness_max for mm in handle.sim.metrics)}")
+                     f"{r['staleness_max']}")
         if t_hit is None:
             # e.g. deadline: dropped-straggler bias can floor the objective
             # JUST above the sync endpoint -- that plateau is the finding
@@ -157,8 +241,8 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
         rows.append((
             f"fig7/{policy}/time_to_target",
             (t_hit or 0.0) * 1e6,
-            f"f={f:.6f};events={events};"
-            f"bytes={handle.sim.ledger.total:.0f}" + extra))
+            f"f={r['f']:.6f};events={r['events']};"
+            f"bytes={r['bytes_total']:.0f}" + extra))
 
     for policy in ("deadline", "async"):
         t_hit = times[policy]
@@ -170,23 +254,16 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
                 else f"{policy}=NOT_REACHED")))
 
     # -- 2. codec bias: memoryless vs error feedback (async transport) -----
-    async_events = math.ceil(rounds * cohort / buffer_k)
-    raw = _cell("async", buffer_size=buffer_k).build()
-    for _ in range(async_events):
-        raw.sim.step()
-    f_raw = fobj_m(raw)
-
+    f_raw = s1["fig7/fedepm/async/raw"]["f_final"]
     gaps = {}
-    for tag, ef in (("memoryless", False), ("error_feedback", True)):
-        codec = xspec.CodecSpec(topk_frac=0.25, bits=8, error_feedback=ef)
-        handle = _cell("async", buffer_size=buffer_k, codec=codec).build()
-        for _ in range(async_events):
-            handle.sim.step()
-        f = fobj_m(handle)
-        gaps[tag] = abs(f - f_raw)
+    for tag, cell_name in (
+            ("memoryless", "fig7/fedepm/async/codec-memoryless"),
+            ("error_feedback", "fig7/fedepm/async/codec-ef")):
+        sc = s1[cell_name]
+        gaps[tag] = abs(sc["f_final"] - f_raw)
         rows.append((f"fig7/codec/gap_{tag}", gaps[tag],
-                     f"f={f:.6f};f_raw={f_raw:.6f};"
-                     f"bytes_up={handle.sim.ledger.total_up:.0f}"))
+                     f"f={sc['f_final']:.6f};f_raw={f_raw:.6f};"
+                     f"bytes_up={sc['bytes_up']:.0f}"))
     rows.append((
         "fig7/codec/ef_gap_shrink",
         0.0 if gaps["error_feedback"] == 0
@@ -198,30 +275,22 @@ def run(d: int = 4000, m: int = 32, k0: int = 8, rho: float = 0.5,
     # identical client-level async semantics for every algorithm: same
     # event engine, concurrency cap, buffer and staleness weighting; the
     # baselines anchor eq. (34) on the cohort via the agg_mask round hook
-    trace_fleet = xspec.FleetSpec(kind="trace", trace_file=str(trace_file),
-                                  latency="pareto", latency_alpha=alpha)
-    cap = max(1, cohort // 2)
     for alg in ("fedepm", "sfedavg"):
-        tsync = _cell("sync", alg=alg, fleet=trace_fleet).build()
-        for _ in range(rounds):
-            tsync.sim.step()
-        f_target_a = fobj_m(tsync)
-        tasync = _cell("async", alg=alg, fleet=trace_fleet,
-                       buffer_size=buffer_k, max_concurrency=cap).build()
-        t_hit, events, f = _race(tasync, m, f_target_a,
-                                 math.ceil(rounds * 3 * cohort / buffer_k))
-        stale = max((mm.staleness_max for mm in tasync.sim.metrics),
-                    default=0)
+        tsync_t = s1[f"fig7/trace/{alg}/sync"]["sim_time_s"]
+        r = s2[f"fig7/trace/{alg}/async"]
+        t_hit = r["t_hit"]
         rows.append((
             f"fig7/trace/{alg}/time_to_target", (t_hit or 0.0) * 1e6,
-            f"f={f:.6f};f_target={f_target_a:.6f};events={events};"
-            f"cap={cap};buffer={buffer_k};staleness_max={stale};"
+            f"f={r['f']:.6f};f_target={r['f_target']:.6f};"
+            f"events={r['events']};"
+            f"cap={cap};buffer={buffer_k};"
+            f"staleness_max={r['staleness_max']};"
             f"trace={pathlib.Path(str(trace_file)).name}"
             + ("" if t_hit else ";NOT_REACHED")))
         rows.append((
             f"fig7/trace/{alg}/speedup_vs_sync",
-            0.0 if not t_hit else tsync.sim.t / t_hit,
-            f"sync={tsync.sim.t:.4g}s;" + (
+            0.0 if not t_hit else tsync_t / t_hit,
+            f"sync={tsync_t:.4g}s;" + (
                 f"async={t_hit:.4g}s" if t_hit else "async=NOT_REACHED")))
     return rows
 
@@ -258,6 +327,11 @@ def main(argv=None):
         description="Fig. 7: async client-level aggregation benchmarks")
     ap.add_argument("--quick", action="store_true",
                     help="reduced task + short round budget (CI smoke)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="sweep-driver worker processes")
+    ap.add_argument("--sweep-dir", default=None,
+                    help="persistent sweep state dir (resumable; also "
+                         "writes merged.json there)")
     ap.add_argument("--json", default=None,
                     help="also write rows as JSON records to this path")
     ap.add_argument("--trace-out", default=None,
@@ -268,7 +342,7 @@ def main(argv=None):
                          "event stream as JSONL")
     args = ap.parse_args(argv)
     kw = QUICK_KW if args.quick else {}
-    rows = run(**kw)
+    rows = run(**kw, jobs=args.jobs, sweep_dir=args.sweep_dir)
     for r in rows:
         print(",".join(map(str, r)))
     if args.json:

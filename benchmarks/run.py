@@ -7,8 +7,13 @@ paper's complete grids, --quick for CI-speed smoke values.
 
 The systems modules (fig6/fig7/engine) define their grids as lists of
 declarative experiment specs (repro.spec, docs/spec.md) and execute every
-cell through the same ``spec.build()`` path as the simulate CLI; the
-kwargs this driver passes them only size the grid.
+cell through the multi-cell sweep driver (repro.launch.sweep_run, same
+``spec.build()`` path as the simulate CLI); the kwargs this driver passes
+them only size the grid, ``--jobs`` parallelizes their cells.
+
+Each module runs isolated: a failure becomes a ``<name>/ERROR`` CSV row
+and the remaining modules still run -- but the invocation then exits
+nonzero (a broken module can never pass as a clean benchmark sweep).
 """
 from __future__ import annotations
 
@@ -25,6 +30,9 @@ def main(argv=None):
                     help="the paper's complete grids (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names (fig2,fig3,...)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="sweep-driver worker processes for the spec-grid "
+                         "modules (fig6/fig7)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_engine, ens_kernel, fig2_accuracy, fig3_k0,
@@ -52,10 +60,10 @@ def main(argv=None):
             n=(1 << 12) if args.quick else (1 << 16)),
         "fig6": lambda: fig6_stragglers.run(
             d=d, m=16 if args.quick else 32,
-            rounds=30 if args.quick else 80),
+            rounds=30 if args.quick else 80, jobs=args.jobs),
         "fig7": lambda: fig7_async.run(
             **(fig7_async.QUICK_KW if args.quick
-               else dict(d=d, m=32, rounds=60))),
+               else dict(d=d, m=32, rounds=60)), jobs=args.jobs),
         "engine": lambda: bench_engine.run(
             **(bench_engine.QUICK_KW if args.quick
                else dict(d=d, m=50, rounds=60))),
@@ -66,16 +74,24 @@ def main(argv=None):
 
     print("name,us_per_call,derived")
     t_all = time.time()
+    failed = []
     for name, job in jobs.items():
         t0 = time.time()
         try:
             for row in job():
                 print(",".join(str(x) for x in row), flush=True)
-        except Exception as e:  # noqa: BLE001
+        except Exception as e:  # noqa: BLE001 - isolate, record, continue
+            failed.append(name)
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t_all:.1f}s",
           file=sys.stderr)
+    if failed:
+        # every job still ran (per-job isolation above), but a broken
+        # module must fail the invocation instead of hiding in the CSV
+        print(f"# {len(failed)} benchmark(s) failed: {','.join(failed)}",
+              file=sys.stderr)
+        return 1
     return 0
 
 

@@ -28,7 +28,7 @@ from repro.spec.registry import (                      # noqa: F401
     register_policy,
     register_task,
 )
-from repro.spec.sweep import sweep                     # noqa: F401
+from repro.spec.sweep import load_sweep, sweep         # noqa: F401
 from repro.spec.types import (                         # noqa: F401
     AlgorithmSpec,
     CodecSpec,

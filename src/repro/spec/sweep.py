@@ -22,6 +22,19 @@ the list is returned, and cell names extend the base name with
 self-describing; when a whole-section axis makes two cells share a name
 (two ``CodecSpec`` values share one ``.name``), each collision gets a
 stable ``#<ordinal>`` suffix so names stay unique.
+
+Numeric axis values are normalized before entering a name: floats print
+as their shortest 12-significant-digit form (so a computed grid value
+like ``0.1 * 3`` names the cell ``policy.deadline=0.3``, not
+``...=0.30000000000000004``), bools print TOML-style ``true``/``false``.
+Two axis values that normalize to the same text fall into the same
+``#<ordinal>`` collision handling as sub-spec axes, so names stay unique
+regardless.
+
+``load_sweep(path)`` reads a spec FILE carrying an optional ``[sweep]``
+table (dotted-path axes + ``seeds``) and returns the expanded grid --
+the input surface of the multi-cell driver
+(:mod:`repro.launch.sweep_run`, docs/spec.md).
 """
 from __future__ import annotations
 
@@ -31,10 +44,22 @@ from typing import Mapping, Sequence
 from repro.spec.types import ExperimentSpec, SpecError
 
 
+def _fmt_value(value) -> str:
+    """Normalize one scalar axis value for use inside a cell name."""
+    if isinstance(value, bool):
+        return "true" if value else "false"
+    if isinstance(value, float):
+        # shortest-readable, not shortest-roundtrip: 12 significant digits
+        # absorbs binary-float artifacts (0.1 * 3) that would otherwise
+        # leak 17-digit noise into artifact keys
+        return format(value, ".12g")
+    return str(value)
+
+
 def _segment(path: str, value) -> str:
     if hasattr(value, "name") and not isinstance(value, str):
         return f"{path}={value.name}"       # a whole sub-spec: use its name
-    return f"{path}={value}"
+    return f"{path}={_fmt_value(value)}"
 
 
 def sweep(base: ExperimentSpec, axes: Mapping[str, Sequence], *,
@@ -75,3 +100,73 @@ def sweep(base: ExperimentSpec, axes: Mapping[str, Sequence], *,
                 name=name if seed is None else f"{name}/s{seed}")
             cells.append(cell.validate())
     return cells
+
+
+# ---------------------------------------------------------------------------
+# [sweep] spec files
+# ---------------------------------------------------------------------------
+
+_SCALARS = (str, int, float, bool)
+
+
+def parse_sweep_table(table) -> tuple[dict, list | None]:
+    """Validate a raw ``[sweep]`` table -> (axes, seeds).
+
+    Every key except ``seeds`` is an axis: a dotted section field (quoted
+    in TOML, e.g. ``"policy.deadline"``) or a top-level spec field, mapped
+    to a non-empty list of scalars. Axis order is the table's key order
+    (last axis fastest, matching :func:`sweep`); ``seeds`` must be a list
+    of ints and always expands innermost. Whole-section axes (sub-spec
+    values) are a Python-API-only feature -- a table value must be a flat
+    scalar list.
+    """
+    if not isinstance(table, Mapping):
+        raise SpecError(f"[sweep] must be a table/object, "
+                        f"got {type(table).__name__}")
+    axes: dict = {}
+    seeds = None
+    for key, values in table.items():
+        if not isinstance(values, Sequence) or isinstance(values,
+                                                          (str, bytes)):
+            raise SpecError(f"[sweep] {key}: expected a list of values, "
+                            f"got {type(values).__name__}")
+        if len(values) == 0:
+            raise SpecError(f"[sweep] {key}: axis is empty")
+        if key == "seeds":
+            bad = [v for v in values
+                   if not isinstance(v, int) or isinstance(v, bool)]
+            if bad:
+                raise SpecError(f"[sweep] seeds: expected ints, "
+                                f"got {bad[0]!r}")
+            seeds = list(values)
+            continue
+        bad = [v for v in values if not isinstance(v, _SCALARS)]
+        if bad:
+            raise SpecError(f"[sweep] {key}: axis values must be scalars "
+                            f"(str/int/float/bool), got {bad[0]!r}")
+        axes[key] = list(values)
+    return axes, seeds
+
+
+def load_sweep(path) -> tuple[ExperimentSpec, list[ExperimentSpec]]:
+    """Read a spec file with an optional ``[sweep]`` table -> (base, cells).
+
+    Without a ``[sweep]`` table the file is an ordinary single-cell spec
+    and the grid is ``[base]`` (validated). With one, the remaining
+    sections form the base cell and the grid is its :func:`sweep`
+    cross-product -- each cell validated, each named
+    ``<base>/<axis>=<value>/.../s<seed>``. Unknown axis paths surface as
+    :class:`~repro.spec.types.SpecError` exactly like
+    ``ExperimentSpec.replace`` misuse.
+    """
+    from repro.spec import serialize
+    d = dict(serialize.read_spec_file(path))
+    table = d.pop("sweep", None)
+    base = ExperimentSpec.from_dict(d)
+    if table is None:
+        return base, [base.validate()]
+    axes, seeds = parse_sweep_table(table)
+    if not axes and seeds is None:
+        raise SpecError(f"{path}: [sweep] table defines no axes and no "
+                        f"seeds")
+    return base, sweep(base, axes, seeds=seeds)

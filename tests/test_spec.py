@@ -86,9 +86,21 @@ def test_file_roundtrip_idempotent(tmp_path, ext):
 
 
 def test_bundled_specs_roundtrip(tmp_path):
+    from repro.spec import load_sweep
+    from repro.spec.serialize import read_spec_file
+
     files = sorted(SPECS_DIR.glob("*.toml"))
     assert len(files) >= 4, "bundled example specs went missing"
+    swept = 0
     for f in files:
+        if "sweep" in dict(read_spec_file(f)):
+            # [sweep] grid files validate base + every expanded cell;
+            # the [sweep] table itself is not part of the dataclass
+            base, cells = load_sweep(f)
+            assert len(cells) > 1 and len({c.name for c in cells}) \
+                == len(cells), f.name
+            swept += 1
+            continue
         spec = ExperimentSpec.load(f)  # validates
         out = tmp_path / f.name
         spec.dump(out)
@@ -96,6 +108,7 @@ def test_bundled_specs_roundtrip(tmp_path):
         jout = tmp_path / (f.stem + ".json")
         spec.dump(jout)
         assert ExperimentSpec.load(jout) == spec, f.name
+    assert swept >= 1, "bundled [sweep] grid file went missing"
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +374,32 @@ def test_sweep_cross_product_and_seeds():
         sweep(base, {"policy.buffer_size": [4]})
     with pytest.raises(SpecError, match="empty"):
         sweep(base, {"algorithm.name": []})
+
+
+def test_sweep_cell_name_value_formatting():
+    """Cell-name segments pin a readable value formatting: floats render
+    shortest-within-12-significant-digits (no 0.30000000000000004 from
+    binary float artifacts), bools as true/false, ints verbatim, sub-spec
+    values by their .name."""
+    base = dataclasses.replace(
+        FULL_SPEC, policy=PolicySpec(name="sync"), codec=CodecSpec(),
+        algorithm=AlgorithmSpec(name="fedepm", rho=0.5, k0=4))
+    assert 0.1 * 3 != 0.3  # the binary artifact the formatting absorbs
+    cells = sweep(base, {"algorithm.rho": [0.1 * 3, 0.25]})
+    assert [c.name for c in cells] == [
+        "test/full/algorithm.rho=0.3", "test/full/algorithm.rho=0.25"]
+    cells = sweep(base, {"algorithm.k0": [4, 16]})
+    assert [c.name for c in cells] == [
+        "test/full/algorithm.k0=4", "test/full/algorithm.k0=16"]
+    cells = sweep(base, {"engine.terminate": [False, True]})
+    assert [c.name for c in cells] == [
+        "test/full/engine.terminate=false",
+        "test/full/engine.terminate=true"]
+    cells = sweep(base, {"policy": [PolicySpec(name="sync"),
+                                    PolicySpec(name="deadline",
+                                               deadline=0.01)]})
+    assert [c.name for c in cells] == [
+        "test/full/policy=sync", "test/full/policy=deadline"]
 
 
 def test_replace_dotted_paths():

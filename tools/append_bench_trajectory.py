@@ -75,7 +75,15 @@ def row_from_engine(summary: dict, label: str) -> dict:
 
 
 def append(engine_json: Path, out: Path, label: str) -> dict:
-    """Load, append/replace the labeled row, write back. Returns the doc."""
+    """Load, append/replace the labeled row, write back. Returns the doc.
+
+    A re-run of an existing label replaces its row IN PLACE (the file
+    stays ordered by first appearance, so the diff under review is the
+    changed numbers, not a moved row), and a replacement that DROPS
+    fields the old row had (e.g. the async_* block after a summary
+    regression) warns on stderr -- a shrinking row usually means the
+    benchmark silently lost a section.
+    """
     summary = json.loads(engine_json.read_text())
     if out.exists():
         doc = json.loads(out.read_text())
@@ -85,9 +93,19 @@ def append(engine_json: Path, out: Path, label: str) -> dict:
     else:
         doc = {"schema": SCHEMA, "rows": []}
     row = row_from_engine(summary, label)
-    rows = [r for r in doc["rows"] if r.get("label") != label]
-    rows.append(row)
-    doc["rows"] = rows
+    rows = doc["rows"]
+    at = next((i for i, r in enumerate(rows)
+               if r.get("label") == label), None)
+    if at is None:
+        rows.append(row)
+    else:
+        dropped = sorted(set(rows[at]) - set(row))
+        if dropped:
+            print(f"warning: {out}: row {label!r} loses field(s) "
+                  f"{', '.join(dropped)} -- the new BENCH_engine.json is "
+                  f"missing section(s) the previous run had",
+                  file=sys.stderr)
+        rows[at] = row
     out.write_text(json.dumps(doc, indent=1) + "\n")
     return doc
 

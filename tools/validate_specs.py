@@ -6,6 +6,11 @@ re-dump to TOML and JSON in a scratch dir, reload both, and require
 dataclass equality with the original plus byte-identical TOML re-dump
 (dump∘load idempotence). Exit 1 listing every failing file.
 
+A file carrying a ``[sweep]`` table (the multi-cell driver's grid files,
+repro.spec.load_sweep) instead validates base + every expanded cell; the
+byte round-trip is skipped there because the ``[sweep]`` table is not
+part of the spec dataclass.
+
 Usage: PYTHONPATH=src python tools/validate_specs.py
 """
 from __future__ import annotations
@@ -19,7 +24,8 @@ SPECS = ROOT / "examples" / "specs"
 
 
 def main() -> int:
-    from repro.spec import ExperimentSpec, SpecError
+    from repro.spec import ExperimentSpec, SpecError, load_sweep
+    from repro.spec.serialize import read_spec_file
 
     files = sorted(SPECS.glob("*.toml"))
     if not files:
@@ -30,6 +36,11 @@ def main() -> int:
         scratch = pathlib.Path(td)
         for f in files:
             try:
+                if "sweep" in dict(read_spec_file(f)):
+                    base, cells = load_sweep(f)
+                    print(f"ok: {f.relative_to(ROOT)} ({base.name}, "
+                          f"{len(cells)}-cell sweep)")
+                    continue
                 spec = ExperimentSpec.load(f)
                 toml_copy = scratch / f.name
                 spec.dump(toml_copy)
