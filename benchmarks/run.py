@@ -5,11 +5,12 @@ Full grids take tens of minutes on this CPU host; the default profile is
 a reduced-but-faithful grid (documented per module). Pass --full for the
 paper's complete grids, --quick for CI-speed smoke values.
 
-The systems modules (fig6/fig7/engine) define their grids as lists of
-declarative experiment specs (repro.spec, docs/spec.md) and execute every
-cell through the multi-cell sweep driver (repro.launch.sweep_run, same
-``spec.build()`` path as the simulate CLI); the kwargs this driver passes
-them only size the grid, ``--jobs`` parallelizes their cells.
+The systems modules (fig6/fig7/fig8/engine) define their grids as lists
+of declarative experiment specs (repro.spec, docs/spec.md) and execute
+every cell through the multi-cell sweep driver (repro.launch.sweep_run,
+same ``spec.build()`` path as the simulate CLI); the kwargs this driver
+passes them only size the grid, ``--jobs`` parallelizes their cells
+uniformly across all of them.
 
 Each module runs isolated: a failure becomes a ``<name>/ERROR`` CSV row
 and the remaining modules still run -- but the invocation then exits
@@ -32,12 +33,12 @@ def main(argv=None):
                     help="comma-separated module names (fig2,fig3,...)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="sweep-driver worker processes for the spec-grid "
-                         "modules (fig6/fig7)")
+                         "modules (fig6/fig7/fig8/engine)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_engine, ens_kernel, fig2_accuracy, fig3_k0,
                             fig4_rho, fig5_privacy, fig6_stragglers,
-                            fig7_async, table1_lct)
+                            fig7_async, fig8_faults, table1_lct)
 
     d = 4000 if args.quick else 45222
     trials = 1 if args.quick else (3 if not args.full else 10)
@@ -64,9 +65,12 @@ def main(argv=None):
         "fig7": lambda: fig7_async.run(
             **(fig7_async.QUICK_KW if args.quick
                else dict(d=d, m=32, rounds=60)), jobs=args.jobs),
+        "fig8": lambda: fig8_faults.run(
+            **(fig8_faults.QUICK_KW if args.quick
+               else dict(d=d, m=32, rounds=60)), jobs=args.jobs),
         "engine": lambda: bench_engine.run(
             **(bench_engine.QUICK_KW if args.quick
-               else dict(d=d, m=50, rounds=60))),
+               else dict(d=d, m=50, rounds=60)), jobs=args.jobs),
     }
     if args.only:
         keep = set(args.only.split(","))

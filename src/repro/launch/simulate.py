@@ -27,6 +27,9 @@ Usage:
       --trace-file tests/fixtures/device_trace.csv   # client-level dispatch
   python -m repro.launch.simulate --alg sfedavg --aggregation overselect \
       --overselect 1.5 --latency lognormal
+  python -m repro.launch.simulate --alg fedepm --aggregation deadline \
+      --deadline 0.002 --fault-drop 0.1 --fault-transient 0.2 \
+      --fault-corrupt 0.05                    # lossy uplink (docs/sim.md)
 
 Aggregation modes: sync (wait for all), deadline (drop stragglers past
 --deadline, eq. (22) carry-through), adaptive (per-client EWMA-learned
@@ -68,6 +71,7 @@ from repro.spec import (
     CodecSpec,
     EngineSpec,
     ExperimentSpec,
+    FaultSpec,
     FleetSpec,
     PolicySpec,
     SpecError,
@@ -130,6 +134,12 @@ def spec_from_args(args) -> ExperimentSpec:
             latency=args.latency, latency_sigma=args.latency_sigma,
             latency_alpha=args.latency_alpha)
 
+    # getattr default: hand-built Namespaces (tests, library callers)
+    # predate the fault flags and simply get the fault-free defaults
+    fault_kw = {spec_field: getattr(args, flag, None)
+                for flag, spec_field in _FAULT_FLAGS.items()
+                if getattr(args, flag, None) is not None}
+
     return ExperimentSpec(
         name=f"cli/{args.alg}-{args.aggregation}",
         seed=args.seed,
@@ -141,8 +151,22 @@ def spec_from_args(args) -> ExperimentSpec:
         codec=CodecSpec(topk_frac=args.topk, bits=args.bits,
                         impl=args.quant_impl,
                         error_feedback=args.error_feedback),
+        faults=FaultSpec(**fault_kw),
         engine=EngineSpec(name=args.engine, rounds=args.rounds,
                           terminate=args.terminate))
+
+
+# CLI fault flags (args attribute -> FaultSpec field). None sentinels: an
+# unset flag leaves the FaultSpec default (all rates zero -> no fault
+# model, the exact pre-fault simulation).
+_FAULT_FLAGS = {
+    "fault_drop": "drop_rate",
+    "fault_transient": "transient_rate",
+    "fault_corrupt": "corrupt_rate",
+    "fault_duplicate": "duplicate_rate",
+    "fault_max_retries": "max_retries",
+    "fault_seed": "seed",
+}
 
 
 def _telemetry_overrides(args) -> dict:
@@ -291,6 +315,30 @@ def main(argv=None):
                          "against the shared reconstruction)")
     ap.add_argument("--quant-impl", default="ref",
                     choices=["ref", "pallas"])
+    ap.add_argument("--fault-drop", type=float, default=None,
+                    help="fault injection: P(an upload attempt is lost "
+                         "mid-flight) -- billed but never arrives "
+                         "(docs/sim.md fault model)")
+    ap.add_argument("--fault-transient", type=float, default=None,
+                    help="fault injection: P(an upload attempt fails "
+                         "transiently); the server retries with "
+                         "exponential backoff, each attempt billed")
+    ap.add_argument("--fault-corrupt", type=float, default=None,
+                    help="fault injection: P(an upload arrives corrupted); "
+                         "the server screens and rejects it, repeat "
+                         "offenders are quarantined")
+    ap.add_argument("--fault-duplicate", type=float, default=None,
+                    help="fault injection: P(a successful upload is "
+                         "delivered twice); the server dedups by sequence "
+                         "number, the copy is billed and discarded")
+    ap.add_argument("--fault-max-retries", type=int, default=None,
+                    help="fault injection: retry budget per contribution "
+                         "before the client is abandoned for the round "
+                         "(default 2)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault injection: dedicated RNG seed (default: "
+                         "derived from --seed; fault draws never perturb "
+                         "the latency stream)")
     ap.add_argument("--seed", dest="seed_flag", type=int, default=None,
                     help="master seed (default 0, or the spec file's)")
     ap.add_argument("--terminate", dest="terminate_flag",
@@ -343,6 +391,7 @@ def main(argv=None):
                              "availability", "trace_file", "m", "n", "d",
                              "rho", "k0", "eps", "topk", "bits",
                              "error_feedback", "quant_impl",
+                             *sorted(_FAULT_FLAGS),
                              *sorted(ASYNC_KNOBS))
                    if getattr(args, k) != ap.get_default(k)]
         if ignored:

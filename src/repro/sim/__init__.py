@@ -1,7 +1,8 @@
 """Federated systems runtime: straggler simulation, sync/deadline/adaptive/
 overselect/async-buffered aggregation, upload codec with optional error
-feedback, and a byte-accurate communication ledger around the core round
-functions. Architecture notes live in docs/sim.md; the declarative
+feedback, seeded fault injection (drops, retries, duplicates, corruption,
+quarantine), and a byte-accurate communication ledger around the core
+round functions. Architecture notes live in docs/sim.md; the declarative
 experiment layer that drives this runtime from TOML/JSON specs is
 repro.spec (docs/spec.md)."""
 from repro.sim.clients import (          # noqa: F401
@@ -14,6 +15,11 @@ from repro.sim.clients import (          # noqa: F401
     register_latency_model,
     round_arrivals,
     uniform_profiles,
+)
+from repro.sim.faults import (           # noqa: F401
+    FaultConfig,
+    FaultModel,
+    build_fault_model,
 )
 from repro.sim.server import (           # noqa: F401
     FedSim,

@@ -73,6 +73,12 @@ def make_profiles(m: int, seed: int = 0, *, speed_sigma: float = 0.4,
     """Lognormal fleet: mobile-like up/down asymmetry (~10 Mbit up, ~80 Mbit
     down by default), dispersion controlled by the sigmas. availability may
     be a scalar applied to all clients."""
+    availability = float(availability)
+    # documented domain is (0, 1]: 0 or NaN would make every client
+    # permanently unreachable / poison the per-round Bernoulli draw
+    if not (0.0 < availability <= 1.0):
+        raise ValueError(f"availability must be in (0, 1]; "
+                         f"got {availability}")
     rng = np.random.default_rng(seed)
 
     def logn(mean, sigma):

@@ -79,6 +79,14 @@ same math on the same bits, so the trajectory -- including the telemetry
 event stream -- is bit-for-bit the eager one
 (tests/test_engine_async.py).
 
+Fault injection (``SimConfig.faults``, repro.sim.faults) is entirely
+host-side: the clocked policy replay resolves the fault chains inside
+``_policy_stream_host`` (snapshot/restoring the model around fixpoint
+passes, like the adaptive EWMA), and the async recording pass runs the
+same pump defenses as eager -- no compiled program changes at all, so
+fault-injected trajectories and telemetry streams stay bit-for-bit
+across engines (tests/test_faults.py).
+
 Client-axis sharding: ``run_rounds(..., mesh=...)`` lays the stacked
 (m, ...) state leaves out over a device mesh's "data" axis (the repo's
 logical rule client -> data, sharding/rules.py + specs.leaf_spec rails)
@@ -184,14 +192,35 @@ def _policy_round_host(sim: FedSim, candidates: np.ndarray,
 
 def _policy_stream_host(sim: FedSim, candidates: np.ndarray,
                         arrivals: np.ndarray):
-    """Replay C rounds of policy logic -> (masks, durs, abandoned, rec_ups)."""
+    """Replay C rounds of policy logic.
+
+    Returns (masks, durs, abandoned, rec_ups, cands_eff, arrs_eff, fouts):
+    the EFFECTIVE candidate/arrival streams the policy saw (fault
+    resolution applied per round, exactly as the eager ``step()`` does
+    before ``_apply_policy``) plus the per-round fault outcomes (None
+    entries without a fault model). Mutates the fault model's state in
+    round order -- fixpoint callers snapshot/restore it around passes,
+    like the adaptive EWMA.
+    """
     C, m = candidates.shape
     masks = np.zeros((C, m), bool)
     rec_ups = np.zeros((C, m), bool)
     durs = np.zeros(C, np.float64)
     abandoned = np.zeros(C, bool)
+    fm = sim._faults
+    cands_eff = np.asarray(candidates, bool).copy()
+    arrs_eff = np.asarray(arrivals, np.float64).copy()
+    fouts: list = [None] * C
     for t in range(C):
-        cand, arr = candidates[t], arrivals[t]
+        cand, arr = cands_eff[t], arrs_eff[t]
+        if fm is not None:
+            fo = fm.apply_clocked(
+                round_idx=sim.round_idx + t, candidates=cand, arrivals=arr,
+                cutoff=sim.sim.deadline
+                if sim.sim.policy == "deadline" else math.inf)
+            cand, arr = fo.candidates, fo.arrivals
+            cands_eff[t], arrs_eff[t] = cand, arr
+            fouts[t] = fo
         mask, dur = _policy_round_host(sim, cand, arr)
         ab = bool(cand.any() and not mask.any())
         if ab:
@@ -201,7 +230,7 @@ def _policy_stream_host(sim: FedSim, candidates: np.ndarray,
         else:
             rec = cand & np.isfinite(arr) & (arr <= dur + 1e-12)
         masks[t], durs[t], abandoned[t], rec_ups[t] = mask, dur, ab, rec
-    return masks, durs, abandoned, rec_ups
+    return masks, durs, abandoned, rec_ups, cands_eff, arrs_eff, fouts
 
 
 # ---------------------------------------------------------------------------
@@ -503,6 +532,13 @@ class _RecordAsyncExec:
             "gamma": np.float32(gamma)})
         self.table.free(c.slot)
 
+    def release(self, sim, c) -> None:
+        # fault injection: the upload was lost/rejected -- its table slot
+        # frees WITHOUT a merge op, so the replay never reads the row (the
+        # non-merge is exact: no op recorded, no device work)
+        self.table.free(c.slot)
+        c.slot = -1
+
 
 def _async_chunk_fn(sim: FedSim, collect_w_tau: bool):
     key = ("async", sim._round_fn, sim._loss_fn, sim.cfg, sim.sim.codec,
@@ -601,7 +637,9 @@ def _record_replay_chunk(sim: FedSim, C: int, collect_w_tau: bool,
     # their gathered batch rows become table rows (exact copies), so the
     # chunk program merges them like any recorded fire's upload
     for _, _, kind, c in sim._events:
-        if kind == _EV_UPLOAD and c.slot < 0:
+        if kind == _EV_UPLOAD and c.slot < 0 and not c.dup:
+            # (duplicate ghosts carry no payload at all -- dedup discards
+            # them at arrival, so they never need a table row)
             s = table.alloc()
             table.z = tmap(lambda t, b: t.at[s].set(b[c.row]),
                            table.z, c.z_batch)
@@ -868,6 +906,12 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
         # 2./3. candidate-stream + policy replay to the abandoned fixpoint
         ewma0 = sim.deadlines.ewma.copy() \
             if sim.sim.policy == "adaptive" else None
+        # the fault model's stream/quarantine state rewinds with each pass
+        # (exactly the EWMA pattern above): every pass replays the chunk's
+        # fault decisions from the same point, and the state the LAST pass
+        # leaves behind is what C eager steps would have left
+        fstate0 = sim._faults.state_snapshot() \
+            if sim._faults is not None else None
         abandoned = np.zeros(C, bool)
         for _ in range(C + 1):
             cands = np.asarray(cand_stream(
@@ -875,8 +919,10 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
             sim.host_syncs += 1
             if ewma0 is not None:
                 sim.deadlines.ewma = ewma0.copy()
-            masks, durs, ab_new, rec_ups = _policy_stream_host(
-                sim, cands, arrivals)
+            if fstate0 is not None:
+                sim._faults.state_restore(fstate0)
+            (masks, durs, ab_new, rec_ups, cands_eff, arrs_eff,
+             fouts) = _policy_stream_host(sim, cands, arrivals)
             if np.array_equal(ab_new, abandoned):
                 break
             abandoned = ab_new
@@ -906,18 +952,28 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
                 emit_clocked_round_events(
                     sim.telemetry, policy=sim.sim.policy,
                     round_idx=sim.round_idx, t0=sim.t,
-                    candidates=cands[t], arrivals=arrivals[t],
+                    candidates=cands_eff[t], arrivals=arrs_eff[t],
                     mask=masks[t], dur=dur, rec_up=rec_ups[t],
                     abandoned=bool(abandoned[t]), codec=sim.sim.codec,
-                    up_bytes=sim._up_bytes)
-            brec = sim.ledger.record_round(
-                down_mask=cands[t], up_mask=rec_ups[t],
-                down_bytes=sim._down_bytes, up_bytes=sim._up_bytes,
-                ts=sim.t + dur, round_idx=sim.round_idx)
+                    up_bytes=sim._up_bytes, faults=fouts[t])
+            if fouts[t] is None:
+                brec = sim.ledger.record_round(
+                    down_mask=cands_eff[t], up_mask=rec_ups[t],
+                    down_bytes=sim._down_bytes, up_bytes=sim._up_bytes,
+                    ts=sim.t + dur, round_idx=sim.round_idx)
+            else:
+                # same count-path billing as the eager step: delivered
+                # uploads + failed attempts + discarded duplicates
+                brec = sim.ledger.record_counts(
+                    down_counts=cands_eff[t].astype(np.int64),
+                    up_counts=rec_ups[t].astype(np.int64)
+                    + fouts[t].extra_up,
+                    down_bytes=sim._down_bytes, up_bytes=sim._up_bytes,
+                    ts=sim.t + dur, round_idx=sim.round_idx)
             sim.t += dur
             m = make_sim_metrics(
                 round_idx=sim.round_idx, t_round=dur, t_total=sim.t,
-                n_contacted=int(cands[t].sum()),
+                n_contacted=int(cands_eff[t].sum()),
                 n_aggregated=int(masks[t].sum()), brec=brec,
                 abandoned=bool(abandoned[t]))
             sim.metrics.append(m)

@@ -92,6 +92,21 @@ the wasted broadcast bytes are still charged, and simulated time advances to
 the deadline-policy cutoff, matching min-report-count behaviour of
 production FL servers. (A sync round with every contacted client offline
 has no cutoff to wait for and costs zero simulated time.)
+
+Fault injection (SimConfig.faults, repro.sim.faults)
+----------------------------------------------------
+With a ``FaultConfig`` attached the server consults a seeded
+``FaultModel`` at its arrival points and runs the defenses in the shared
+host code: quarantined clients are removed from the candidate set before
+dispatch; each upload runs an attempt chain (mid-flight drop / transient
+failure with retry + exponential backoff / corruption screened and
+counted toward quarantine / clean delivery, possibly duplicated and
+deduped); every fired attempt is billed to the byte ledger via the count
+path. A round that loses its whole cohort to faults is abandoned exactly
+like a deadline miss. All decisions are host-side and replayed
+identically by the scan engine, so fault-injected runs stay bit-for-bit
+across engines; ``faults=None`` (any zero-rate config) leaves every path
+above byte-identical to the fault-free simulator.
 """
 from __future__ import annotations
 
@@ -110,6 +125,7 @@ import numpy as np
 from repro.core import baselines, fedepm, participation
 from repro.core.treeutil import tmap, tree_size, tree_where_client
 from repro.sim import clients as simclients
+from repro.sim.faults import FaultConfig, FaultRoundOutcome, build_fault_model
 from repro.sim.transport import (
     ByteLedger,
     CodecConfig,
@@ -125,6 +141,13 @@ _POLICIES = ("sync", "deadline", "adaptive", "overselect", "async")
 
 # async: consecutive all-offline cohort draws before a step gives up
 _MAX_DRY_DISPATCHES = 3
+
+# fault injection only: in-loop cohort draws one aggregation event may
+# make before it stops waiting for a full buffer and merges what it has.
+# Under heavy loss every draw can come up live-but-lost -- the dry counter
+# above never trips (the cohorts ARE live) yet the buffer never fills, so
+# without this cap a drop_rate=1.0 run would pump forever.
+_MAX_FAULT_SELECTS = 8
 
 # event-queue kinds (heap entries sort by (time, push sequence, kind))
 _EV_START = 0    # payload: (client index, round-trip duration seconds)
@@ -148,6 +171,8 @@ class SimConfig:
     # adaptive per-client deadlines
     deadline_slack: float = 2.0     # wait budget = slack * ewma_i
     ewma_beta: float = 0.3          # EWMA weight of the newest observation
+    # fault injection (repro.sim.faults); None = the fault-free simulator
+    faults: FaultConfig | None = None
 
 
 class SimMetrics(NamedTuple):
@@ -195,7 +220,9 @@ def emit_clocked_round_events(rec, *, policy: str, round_idx: int,
                               dur: float, rec_up: np.ndarray,
                               abandoned: bool,
                               codec: CodecConfig | None,
-                              up_bytes: float) -> None:
+                              up_bytes: float,
+                              faults: "FaultRoundOutcome | None" = None
+                              ) -> None:
     """Emit one clocked round's telemetry events (sync/deadline/adaptive/
     overselect; policy="async" has its own event-loop instrumentation).
 
@@ -220,6 +247,22 @@ def emit_clocked_round_events(rec, *, policy: str, round_idx: int,
         rec.event("upload_arrival", ts=t0 + min(float(arrivals[i]), dur),
                   round_idx=round_idx, client=int(i))
     t_end = t0 + dur
+    if faults is not None:
+        # fault resolution happened DURING the round: events carry the
+        # attempt-chain times relative to the round start (a lost upload's
+        # timestamp may exceed ``dur`` -- the server had already moved on)
+        for cl, t_ev, att in faults.retries:
+            rec.event("retry", ts=t0 + t_ev, round_idx=round_idx,
+                      client=cl, attempt=att)
+        for cl, t_ev, reason in faults.drops:
+            rec.event("upload_drop", ts=t0 + t_ev, round_idx=round_idx,
+                      client=cl, reason=reason)
+        for cl, t_ev in faults.duplicates:
+            rec.event("duplicate_discard", ts=t0 + t_ev,
+                      round_idx=round_idx, client=cl)
+        for cl, until in faults.quarantines:
+            rec.event("quarantine", ts=t_end, round_idx=round_idx,
+                      client=cl, until_round=until)
     if abandoned:
         rec.event("abandon", ts=t_end, round_idx=round_idx,
                   n_contacted=int(candidates.sum()))
@@ -257,6 +300,9 @@ class _Contribution:
     w_batch: Any   # (g_pad, ...) stacked iterate rows of the dispatch group
     row: int       # this client's row within the batch
     slot: int = -1  # scan engine: payload-table row (-1 = eager batch mode)
+    attempt: int = 1  # fault injection: delivery attempt (1 = original)
+    dup: bool = False  # fault injection: duplicate ghost (never merged;
+    #                    carries no batch refs and owns no table slot)
 
 
 def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
@@ -463,6 +509,15 @@ class _EagerAsyncExec:
             sim._async_table.free(c.slot)
             c.slot = -1
 
+    def release(self, sim, c: "_Contribution") -> None:
+        """Discard an in-flight contribution WITHOUT merging it (fault
+        injection: the upload was lost or rejected) -- reclaim whatever
+        payload storage it holds. Eager batch refs just drop with the
+        contribution; table-backed slots are freed explicitly."""
+        if c.slot >= 0 and sim._async_table is not None:
+            sim._async_table.free(c.slot)
+            c.slot = -1
+
 
 #: shared stateless default executor (the eager reference semantics)
 _EAGER_ASYNC_EXEC = _EagerAsyncExec()
@@ -524,6 +579,10 @@ class FedSim:
             sim.latency, sigma=sim.latency_sigma, alpha=sim.latency_alpha)
         self._rng = np.random.default_rng(sim.seed)
         self._codec_key = jax.random.PRNGKey(sim.seed ^ 0x5EED)
+        # fault model on its OWN seeded stream -- never the arrival stream,
+        # whose draw ORDER differs between engines (the scan engine batches
+        # arrival draws per chunk); None whenever no fault process can fire
+        self._faults = build_fault_model(sim.faults, cfg.m)
 
         jit_key = (round_fn, loss_fn, cfg, id(batches))
         self._step = _shared_jit(
@@ -734,6 +793,19 @@ class FedSim:
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
             up_bytes=self._up_bytes)
+        fo = None
+        if self._faults is not None:
+            # resolve fault chains BEFORE the policy: the policy then sees
+            # the effective candidate set (quarantine removed) and arrival
+            # times (retry-delayed / lost), so every defense downstream --
+            # masking, abandonment, adaptive EWMA observation -- is the
+            # existing code operating on what actually reached the server
+            fo = self._faults.apply_clocked(
+                round_idx=self.round_idx, candidates=candidates,
+                arrivals=arrivals,
+                cutoff=self.sim.deadline
+                if self.sim.policy == "deadline" else math.inf)
+            candidates, arrivals = fo.candidates, fo.arrivals
         mask, dur = self._apply_policy(candidates, arrivals)
 
         abandoned = candidates.any() and not mask.any()
@@ -773,11 +845,21 @@ class FedSim:
                 round_idx=self.round_idx, t0=self.t, candidates=candidates,
                 arrivals=arrivals, mask=mask, dur=dur, rec_up=rec_up,
                 abandoned=bool(abandoned), codec=self.sim.codec,
-                up_bytes=self._up_bytes)
-        brec = self.ledger.record_round(
-            down_mask=candidates, up_mask=rec_up,
-            down_bytes=self._down_bytes, up_bytes=self._up_bytes,
-            ts=self.t + dur, round_idx=self.round_idx)
+                up_bytes=self._up_bytes, faults=fo)
+        if fo is None:
+            brec = self.ledger.record_round(
+                down_mask=candidates, up_mask=rec_up,
+                down_bytes=self._down_bytes, up_bytes=self._up_bytes,
+                ts=self.t + dur, round_idx=self.round_idx)
+        else:
+            # failed attempts and discarded duplicates sent real bytes:
+            # bill them on top of the delivered-upload mask via the count
+            # path (record_round is the counts==mask special case)
+            brec = self.ledger.record_counts(
+                down_counts=candidates.astype(np.int64),
+                up_counts=rec_up.astype(np.int64) + fo.extra_up,
+                down_bytes=self._down_bytes, up_bytes=self._up_bytes,
+                ts=self.t + dur, round_idx=self.round_idx)
         self.t += dur
         m = make_sim_metrics(
             round_idx=self.round_idx, t_round=dur, t_total=self.t,
@@ -808,6 +890,12 @@ class FedSim:
         aggregation anchor the baselines' agg_mask hook receives.
         """
         candidates = self._exec.draw_candidates(self)
+        if self._faults is not None:
+            # quarantined clients are not contacted at all: no broadcast
+            # bytes, no slot, no dispatch event (the draw itself still
+            # advances nothing -- selection is a pure key-stream read)
+            candidates = candidates \
+                & ~self._faults.quarantine_mask(self.round_idx)
         durations = simclients.round_arrivals(
             self.profiles, self._rng, self._latency,
             work_flops=self._work, down_bytes=self._down_bytes,
@@ -880,6 +968,82 @@ class FedSim:
                            (self.t + dur, self._eseq, _EV_UPLOAD, c))
             self._eseq += 1
 
+    def _handle_faulty_upload(self, c: _Contribution) -> bool:
+        """Resolve one popped upload event against the fault model.
+
+        Returns True when the event was consumed here (lost, retried,
+        rejected or deduped) and must NOT be buffered; False for a clean
+        delivery the pump buffers as usual. Every attempt that reached the
+        wire -- duplicates and rejected payloads included -- bills one
+        upload to the count ledger. Runs identically under both engines
+        (the pump is shared and the model's stream is its own), so the
+        scan recording pass reproduces every decision made here.
+        """
+        fm = self._faults
+        tel = self.telemetry.enabled
+        if c.dup or (c.client, c.serial, c.attempt) in fm.seen:
+            # duplicate delivery: billed, deduped on the (client, serial,
+            # attempt) sequence number, never merged. Ghosts hold no batch
+            # refs and never occupied a slot, so in-flight is untouched.
+            # Counted here -- at discard/billing time -- so the counter
+            # can never drift from the byte ledger (a ghost still queued
+            # at run end is neither billed nor counted).
+            self._ev_up[c.client] += 1
+            fm.total_duplicates += 1
+            if tel:
+                self.telemetry.event(
+                    "duplicate_discard", ts=self.t,
+                    round_idx=self.round_idx, client=int(c.client))
+            return True
+        fate = fm.draw_outcome()
+        if fate == "ok":
+            delay = fm.draw_duplicate()
+            if delay is not None:
+                # the duplicate arrives reorder_jitter*U[0,1) late: a
+                # payload-free ghost event dedup will discard on arrival
+                ghost = dataclasses.replace(c, dup=True, slot=-1,
+                                            z_batch=None, w_batch=None)
+                heapq.heappush(self._events, (self.t + delay, self._eseq,
+                                              _EV_UPLOAD, ghost))
+                self._eseq += 1
+            return False
+        self._ev_up[c.client] += 1   # the failed attempt sent real bytes
+        if fate == "transient" and c.attempt <= fm.cfg.max_retries:
+            fm.total_retries += 1
+            if tel:
+                self.telemetry.event(
+                    "retry", ts=self.t, round_idx=self.round_idx,
+                    client=int(c.client), attempt=c.attempt + 1)
+            delay = fm.backoff(c.attempt)
+            c.attempt += 1
+            # still in flight (the slot stays held): same contribution,
+            # redelivered after exponential backoff
+            heapq.heappush(self._events,
+                           (self.t + delay, self._eseq, _EV_UPLOAD, c))
+            self._eseq += 1
+            return True
+        # lost for good: mid-flight drop, retry budget exhausted, or
+        # rejected by the corruption screen
+        reason = {"drop": "drop", "transient": "exhausted",
+                  "corrupt": "corrupt"}[fate]
+        self._n_inflight -= 1
+        self._ev_dropped += 1
+        self._exec.release(self, c)
+        fm.total_drops += 1
+        if fate == "corrupt":
+            fm.total_corrupt += 1
+            until = fm.record_offense(int(c.client), self.round_idx)
+            if until is not None and tel:
+                self.telemetry.event(
+                    "quarantine", ts=self.t, round_idx=self.round_idx,
+                    client=int(c.client), until_round=until)
+        if tel:
+            self.telemetry.event(
+                "upload_drop", ts=self.t, round_idx=self.round_idx,
+                client=int(c.client), reason=reason,
+                in_flight=self._n_inflight, stalled=len(self._stalled))
+        return True
+
     def _step_async(self) -> SimMetrics:
         """One aggregation event: pump the per-client event queue until the
         buffer holds ``buffer_size`` contributions, staleness-merge them in
@@ -907,6 +1071,7 @@ class FedSim:
             self._select_cohort()
         buffer: list[_Contribution] = []
         dry = 0
+        n_selects = 0
         while len(buffer) < self._buffer_k and dry < _MAX_DRY_DISPATCHES:
             # un-stall slot-blocked dispatches first: they have been waiting
             # since an earlier instant and outrank anything queued later
@@ -917,6 +1082,14 @@ class FedSim:
                 self._fire_group(group)
                 continue
             if not self._events:
+                if self._faults is not None \
+                        and n_selects >= _MAX_FAULT_SELECTS:
+                    # graceful degradation under heavy loss: stop waiting
+                    # for a full buffer and merge whatever survived (an
+                    # empty buffer abandons the event, like a missed
+                    # deadline)
+                    break
+                n_selects += 1
                 # nothing in flight and nothing startable: draw fresh work
                 dry = dry + 1 if self._select_cohort() == 0 else 0
                 continue
@@ -939,6 +1112,8 @@ class FedSim:
                 self._fire_group(group)
                 continue
             c = payload
+            if self._faults is not None and self._handle_faulty_upload(c):
+                continue
             self._n_inflight -= 1
             self._ev_up[c.client] += 1
             buffer.append(c)
@@ -952,6 +1127,10 @@ class FedSim:
         staleness = [self._version - c.version for c in buffer]
         for c, s in zip(buffer, staleness):
             gamma = participation.staleness_weight(s, self.sim.staleness_exp)
+            if self._faults is not None:
+                # dedup sequence number of the merged delivery: any later
+                # redelivery of the same attempt is discarded at arrival
+                self._faults.seen.add((c.client, c.serial, c.attempt))
             self._exec.merge(self, c, s, gamma)
             if self.telemetry.enabled:
                 if self.sim.codec is not None:
@@ -1012,6 +1191,8 @@ class FedSim:
         }
         if self.sim.policy == "adaptive":
             snap["ewma"] = self.deadlines.ewma.copy()
+        if self._faults is not None:
+            snap["faults"] = self._faults.state_snapshot()
         if self.sim.policy == "async":
             snap["async"] = {
                 "version": self._version,
@@ -1048,6 +1229,8 @@ class FedSim:
         self.telemetry.rewind(snap["tel_mark"])
         if self.sim.policy == "adaptive":
             self.deadlines.ewma = snap["ewma"].copy()
+        if self._faults is not None:
+            self._faults.state_restore(snap["faults"])
         if self.sim.policy == "async":
             a = snap["async"]
             self._version = a["version"]

@@ -34,6 +34,7 @@ from repro.spec.types import (                         # noqa: F401
     CodecSpec,
     EngineSpec,
     ExperimentSpec,
+    FaultSpec,
     FleetSpec,
     PolicySpec,
     SpecError,

@@ -87,7 +87,29 @@ def _sim_config(spec: ExperimentSpec) -> SimConfig:
         staleness_exp=default("staleness_exp"),
         max_concurrency=default("max_concurrency"),
         deadline_slack=default("deadline_slack"),
-        ewma_beta=default("ewma_beta"))
+        ewma_beta=default("ewma_beta"),
+        faults=_fault_config(spec))
+
+
+def _fault_config(spec: ExperimentSpec):
+    """[faults] -> FaultConfig, or None when every fault rate is zero (the
+    zero-rate spec builds the exact pre-fault sim, golden-pinned)."""
+    fl = spec.faults
+    if not (fl.drop_rate > 0 or fl.transient_rate > 0
+            or fl.corrupt_rate > 0 or fl.duplicate_rate > 0):
+        return None
+    from repro.sim.faults import FaultConfig
+    # dedicated stream, decorrelated from the arrival RNG by default so
+    # fault decisions never perturb (or depend on) the latency draws
+    seed = fl.seed if fl.seed is not None else spec.seed ^ 0xFA17
+    return FaultConfig(
+        drop_rate=fl.drop_rate, transient_rate=fl.transient_rate,
+        corrupt_rate=fl.corrupt_rate, duplicate_rate=fl.duplicate_rate,
+        max_retries=fl.max_retries, backoff_base=fl.backoff_base,
+        backoff_factor=fl.backoff_factor, reorder_jitter=fl.reorder_jitter,
+        quarantine_after=fl.quarantine_after,
+        quarantine_rounds=fl.quarantine_rounds,
+        corrupt_mode=fl.corrupt_mode, seed=seed)
 
 
 def build(spec: ExperimentSpec) -> "RunHandle":
@@ -300,4 +322,6 @@ class RunHandle:
             summary["staleness_mean"] = float(np.mean(
                 [mm.staleness_mean for mm in sim.metrics
                  if not mm.abandoned] or [0.0]))
+        if sim._faults is not None:
+            summary["faults"] = sim._faults.summary()
         return summary

@@ -485,6 +485,41 @@ def _validate_telemetry(spec: ExperimentSpec) -> None:
                  "a disabled recorder would silently write nothing)")
 
 
+def _validate_faults(spec: ExperimentSpec) -> None:
+    from repro.sim.faults import CORRUPT_MODES
+    fl = spec.faults
+    for field in ("drop_rate", "transient_rate", "corrupt_rate",
+                  "duplicate_rate"):
+        v = getattr(fl, field)
+        # NaN fails both comparisons, so it is rejected here too
+        _require(0.0 <= v <= 1.0,
+                 f"[faults] {field} must be in [0, 1]; got {v}")
+    _require(fl.drop_rate + fl.transient_rate + fl.corrupt_rate <= 1.0,
+             "[faults] drop_rate + transient_rate + corrupt_rate must be "
+             f"<= 1 (they partition one attempt's outcome); got "
+             f"{fl.drop_rate + fl.transient_rate + fl.corrupt_rate}")
+    _require(fl.max_retries >= 0,
+             f"[faults] max_retries must be >= 0; got {fl.max_retries}")
+    _require(fl.backoff_base > 0,
+             f"[faults] backoff_base must be > 0 seconds; "
+             f"got {fl.backoff_base}")
+    _require(fl.backoff_factor >= 1.0,
+             f"[faults] backoff_factor must be >= 1; "
+             f"got {fl.backoff_factor}")
+    _require(0.0 <= fl.reorder_jitter < float("inf"),
+             f"[faults] reorder_jitter must be a finite value >= 0 "
+             f"seconds; got {fl.reorder_jitter}")
+    _require(fl.quarantine_after >= 1,
+             f"[faults] quarantine_after must be >= 1; "
+             f"got {fl.quarantine_after}")
+    _require(fl.quarantine_rounds >= 1,
+             f"[faults] quarantine_rounds must be >= 1; "
+             f"got {fl.quarantine_rounds}")
+    _require(fl.corrupt_mode in CORRUPT_MODES,
+             f"[faults] unknown corrupt_mode {fl.corrupt_mode!r}; "
+             f"known: {CORRUPT_MODES}")
+
+
 def validate_spec(spec: ExperimentSpec) -> None:
     """Raise SpecError on the first inconsistency found."""
     from repro.spec.types import _SECTIONS
@@ -494,7 +529,7 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _require(isinstance(spec.seed, int) and not isinstance(spec.seed, bool)
              and spec.seed >= 0,
              f"seed must be a non-negative int; got {spec.seed!r}")
-    for sec in ("task", "fleet"):
+    for sec in ("task", "fleet", "faults"):
         sub_seed = getattr(spec, sec).seed
         _require(sub_seed is None or sub_seed >= 0,
                  f"[{sec}] seed must be >= 0 (None = experiment seed); "
@@ -502,7 +537,7 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _require(isinstance(spec.name, str) and spec.name != "",
              f"name must be a non-empty string; got {spec.name!r}")
     for sec in ("task", "algorithm", "fleet", "policy", "codec", "engine",
-                "telemetry"):
+                "telemetry", "faults"):
         for f in dataclasses.fields(getattr(spec, sec)):
             val = getattr(getattr(spec, sec), f.name)
             _require(not isinstance(val, bool) or "bool" in f.type,
@@ -514,3 +549,4 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _validate_codec(spec.codec)
     _validate_engine(spec)
     _validate_telemetry(spec)
+    _validate_faults(spec)

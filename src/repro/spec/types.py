@@ -196,6 +196,39 @@ class TelemetrySpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Fault injection (repro.sim.faults): seeded per-upload fault
+    processes plus the server-defense knobs.
+
+    The four rates are per upload attempt: ``drop_rate`` (lost mid-flight),
+    ``transient_rate`` (retryable failure; every attempt is billed,
+    retried after ``backoff_base * backoff_factor**(attempt-1)`` seconds,
+    at most ``max_retries`` retries), ``corrupt_rate`` (payload damaged
+    per ``corrupt_mode``; screened, counted toward quarantine --
+    ``quarantine_after`` offenses sideline the client for
+    ``quarantine_rounds`` rounds), ``duplicate_rate`` (a clean delivery
+    arrives twice; the duplicate is deduped, delayed ``reorder_jitter *
+    U[0,1)`` seconds under the async policy). The three failure rates must
+    sum to <= 1. A spec with all four rates zero is EXACTLY the fault-free
+    simulator (no model is built at all). ``seed`` seeds the fault
+    stream's own RNG (None = derived from the experiment seed).
+    """
+
+    drop_rate: float = 0.0
+    transient_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    duplicate_rate: float = 0.0
+    max_retries: int = 2
+    backoff_base: float = 1e-3
+    backoff_factor: float = 2.0
+    reorder_jitter: float = 0.0
+    quarantine_after: int = 2
+    quarantine_rounds: int = 3
+    corrupt_mode: str = "nan"
+    seed: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """How rounds execute: engine choice, budget, chunking, termination.
 
@@ -233,6 +266,7 @@ _SECTIONS: dict[str, type] = {
     "codec": CodecSpec,
     "engine": EngineSpec,
     "telemetry": TelemetrySpec,
+    "faults": FaultSpec,
 }
 
 
@@ -248,6 +282,7 @@ class ExperimentSpec:
     codec: CodecSpec = CodecSpec()
     engine: EngineSpec = EngineSpec()
     telemetry: TelemetrySpec = TelemetrySpec()
+    faults: FaultSpec = FaultSpec()
     name: str = "experiment"
     seed: int = 0
 

@@ -18,6 +18,19 @@ The sim emits a small, closed taxonomy of events (``EVENT_KINDS``):
   ledger_record  -- the byte ledger recorded the round's transfers (attrs
                     carry the round delta and the running totals).
 
+Fault-injection runs (repro.sim.faults, docs/sim.md) add four kinds:
+
+  upload_drop       -- an upload was billed but never merged: lost
+                       mid-flight (``reason="drop"``), retry budget or
+                       listening window exhausted (``"exhausted"``), or
+                       rejected by the corruption screen (``"corrupt"``).
+  retry             -- the server scheduled a retry after a transient
+                       upload failure (attrs carry the attempt number).
+  duplicate_discard -- dedup discarded a duplicate delivery (billed,
+                       never merged).
+  quarantine        -- a repeat corruption offender was quarantined
+                       (attrs carry the release round).
+
 Timestamps are SIMULATED seconds (``FedSim.t``'s clock), not wall time --
 the stream describes what the modeled fleet did, and the eager and scan
 engines reconstruct identical streams for the clocked policies
@@ -36,7 +49,8 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 EVENT_KINDS = ("round_start", "dispatch", "upload_arrival", "merge",
-               "abandon", "codec_encode", "ledger_record")
+               "abandon", "codec_encode", "ledger_record",
+               "upload_drop", "retry", "duplicate_discard", "quarantine")
 _KIND_SET = frozenset(EVENT_KINDS)
 
 

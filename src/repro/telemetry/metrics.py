@@ -17,8 +17,10 @@ summary. Instruments:
 
 Built-in metric names (docs/observability.md has the full table):
 ``rounds``, ``dispatches``, ``uploads``, ``merges``, ``abandoned_rounds``,
-``codec_encodes``, ``codec_bytes``, ``bytes_up``, ``bytes_down`` (counters);
-``in_flight``, ``stalled``, ``staleness`` (gauges); ``staleness`` (histogram).
+``codec_encodes``, ``codec_bytes``, ``bytes_up``, ``bytes_down``, and --
+under fault injection -- ``upload_drops``, ``retries``,
+``duplicates_discarded``, ``quarantines`` (counters); ``in_flight``,
+``stalled``, ``staleness`` (gauges); ``staleness`` (histogram).
 
 Everything is host-side plain Python -- observing a metric never touches
 jax or the RNG streams.
@@ -129,6 +131,14 @@ class MetricsRegistry:
         elif kind == "ledger_record":
             self.counter("bytes_up").inc(attrs.get("up", 0.0), ts=ev.ts)
             self.counter("bytes_down").inc(attrs.get("down", 0.0), ts=ev.ts)
+        elif kind == "upload_drop":
+            self.counter("upload_drops").inc()
+        elif kind == "retry":
+            self.counter("retries").inc()
+        elif kind == "duplicate_discard":
+            self.counter("duplicates_discarded").inc()
+        elif kind == "quarantine":
+            self.counter("quarantines").inc()
         # in-flight occupancy / stalled-FIFO depth ride on dispatch and
         # upload_arrival events under the async event loop
         if "in_flight" in attrs:

@@ -8,8 +8,9 @@ microseconds:
   * pid 2 ("clients"): ONE TRACK PER CLIENT (tid = client index). Every
     live dispatch becomes a complete-span ("X") named ``train+upload``
     covering the client's round trip, so a straggler shows up as the one
-    long span gating its round; upload arrivals and offline contacts are
-    instants on the same track.
+    long span gating its round; upload arrivals, offline contacts and
+    fault events (upload_drop / retry / duplicate_discard / quarantine)
+    are instants on the same track.
   * pid 1 ("server"): one track per server policy (tid 0, named after the
     policy). Each round is a complete-span from its round_start to the
     last event it produced; merges, abandons and codec encodes are
@@ -70,6 +71,16 @@ def to_trace(events, *, label: str = "run") -> dict:
                  s="t", args=args)
         elif ev.kind in ("merge", "abandon", "codec_encode"):
             emit(ev.kind, "i", ev.ts, _SERVER_PID, 0, s="t", args=args)
+        elif ev.kind in ("upload_drop", "retry", "duplicate_discard",
+                         "quarantine"):
+            # fault events land on the affected client's track so a lossy
+            # client reads as a run of drop/retry instants; server-scoped
+            # fallbacks (client=None) go to the policy track
+            if ev.client is not None:
+                emit(ev.kind, "i", ev.ts, _CLIENT_PID, ev.client,
+                     s="t", args=args)
+            else:
+                emit(ev.kind, "i", ev.ts, _SERVER_PID, 0, s="t", args=args)
         elif ev.kind == "ledger_record":
             if "total_up" in ev.attrs:
                 emit("bytes", "C", ev.ts, _SERVER_PID, 0,

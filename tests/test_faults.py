@@ -1,0 +1,286 @@
+"""Fault-injection subsystem (repro.sim.faults) + failure-aware runtime.
+
+Pins the fault model's contract end to end:
+
+  * ENGINE EQUIVALENCE -- under nonzero fault rates, every aggregation
+    policy produces bit-identical states, byte ledgers, fault counters
+    AND telemetry event streams between the eager and scan engines (the
+    fault stream is host-side and replayed, never re-drawn);
+  * FAULT PROCESS SEMANTICS -- quarantine lifecycle (offense threshold,
+    release round, max-extension on re-offense), retry backoff schedule,
+    duplicate dedup never double-merging (a duplicate-only fault model
+    leaves the trajectory bit-identical to a fault-free run and only
+    adds discarded billed bytes);
+  * SPEC SURFACE -- [faults] validation rejects out-of-domain rates,
+    NaN, bad retry/backoff/quarantine knobs; the zero-rate FaultSpec
+    builds NO fault model; the CLI fault flags map onto the spec;
+  * SATELLITE: make_profiles availability domain -- the documented
+    (0, 1] range is enforced (0, negatives and NaN now raise, matching
+    the trace loader's existing check).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.launch import simulate
+from repro.sim import make_profiles
+from repro.sim.clients import LatencyTrace
+from repro.sim.faults import FaultConfig, FaultModel, build_fault_model
+from repro.spec import ExperimentSpec, FaultSpec, SpecError, TaskSpec
+from repro.spec.types import TelemetrySpec
+
+M = 16
+N = 14
+
+FAULTY = dict(drop_rate=0.15, transient_rate=0.2, corrupt_rate=0.1,
+              duplicate_rate=0.15, reorder_jitter=0.002, max_retries=2)
+
+POLICIES = [
+    ("sync", {}),
+    ("deadline", {"deadline": 0.05}),
+    ("adaptive", {}),
+    ("overselect", {}),
+    ("async", {"buffer_size": 3, "max_concurrency": 4}),
+]
+
+
+def _spec(policy, policy_kw, engine, *, chunk=None, rounds=6, fl=FAULTY,
+          telemetry=True, seed=0):
+    spec = ExperimentSpec(
+        task=TaskSpec(kind="logreg", m=M, n=N, d=200),
+        faults=FaultSpec(**fl),
+        telemetry=TelemetrySpec(enabled=telemetry),
+        name="faults-test", seed=seed)
+    return dataclasses.replace(
+        spec,
+        policy=dataclasses.replace(spec.policy, name=policy, **policy_kw),
+        engine=dataclasses.replace(spec.engine, name=engine, rounds=rounds,
+                                   chunk=chunk)).validate()
+
+
+def _event_tuples(sim):
+    return [(e.kind, e.round_idx, e.client, e.ts,
+             tuple(sorted(e.attrs.items()))) for e in sim.telemetry.events]
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence under faults
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,kw", POLICIES, ids=[p for p, _ in POLICIES])
+def test_eager_scan_bitforbit_under_faults(policy, kw):
+    """Eager and scan runs of the same faulted experiment agree on the
+    final state, ledger, fault counters and the FULL telemetry event
+    stream -- the ISSUE's bit-for-bit acceptance bar."""
+    h1 = _spec(policy, kw, "eager").build()
+    s1 = h1.run()
+    h2 = _spec(policy, kw, "scan", chunk=3).build()
+    s2 = h2.run()
+    w1, w2 = np.asarray(h1.sim.state.w_tau), np.asarray(h2.sim.state.w_tau)
+    assert np.array_equal(w1, w2)
+    assert h1.sim.t == h2.sim.t
+    assert s1["bytes_up"] == s2["bytes_up"]
+    assert s1["bytes_down"] == s2["bytes_down"]
+    assert s1["faults"] == s2["faults"]
+    assert s1["faults"]["upload_drops"] + s1["faults"]["retries"] > 0
+    assert _event_tuples(h1.sim) == _event_tuples(h2.sim)
+
+
+def test_drop_everything_async_terminates_both_engines():
+    """drop_rate=1.0 under async: cohorts stay live (so the dry-dispatch
+    rule never fires) but the fault-select cap bounds each step; every
+    round is abandoned identically in both engines."""
+    kw = {"buffer_size": 3, "max_concurrency": 4}
+    fl = dict(drop_rate=1.0)
+    h1 = _spec("async", kw, "eager", rounds=3, fl=fl).build()
+    s1 = h1.run()
+    h2 = _spec("async", kw, "scan", chunk=2, rounds=3, fl=fl).build()
+    s2 = h2.run()
+    assert s1["abandoned_rounds"] == s2["abandoned_rounds"] == 3
+    assert s1["faults"] == s2["faults"]
+    assert s1["faults"]["upload_drops"] > 0
+    assert np.array_equal(np.asarray(h1.sim.state.w_tau),
+                          np.asarray(h2.sim.state.w_tau))
+
+
+# ---------------------------------------------------------------------------
+# fault-process semantics
+# ---------------------------------------------------------------------------
+
+def test_quarantine_lifecycle():
+    """Offense accounting: quarantine fires at the threshold, holds for
+    quarantine_rounds, releases, and re-offense extends (never shortens)
+    an active sentence."""
+    cfg = FaultConfig(corrupt_rate=0.5, quarantine_after=2,
+                      quarantine_rounds=3, seed=0)
+    fm = FaultModel(cfg, M)
+    assert fm.record_offense(4, round_idx=0) is None      # 1st offense
+    until = fm.record_offense(4, round_idx=0)             # 2nd -> fires
+    assert until == 0 + 1 + 3
+    mask = fm.quarantine_mask(1)
+    assert mask[4] and mask.sum() == 1
+    assert not fm.quarantine_mask(until)[4]               # released
+    assert fm.offenses[4] == 0                            # counter reset
+    # re-offense during the sentence extends from the offense round
+    fm.record_offense(4, round_idx=2)
+    until2 = fm.record_offense(4, round_idx=2)
+    assert until2 == 2 + 1 + 3 and fm.quarantined_until[4] == until2
+    # a LATER sentence never shrinks an existing longer one
+    fm.quarantined_until[7] = 99
+    fm.record_offense(7, round_idx=1)
+    fm.record_offense(7, round_idx=1)
+    assert fm.quarantined_until[7] == 99
+    assert fm.total_quarantines == 3
+
+
+def test_backoff_schedule_and_state_roundtrip():
+    cfg = FaultConfig(transient_rate=0.5, backoff_base=1e-3,
+                      backoff_factor=2.0, seed=0)
+    fm = FaultModel(cfg, M)
+    assert fm.backoff(1) == pytest.approx(1e-3)
+    assert fm.backoff(3) == pytest.approx(4e-3)
+    # snapshot/restore replays the identical decision stream (the scan
+    # engine's fixpoint rewinds the fault state between passes)
+    snap = fm.state_snapshot()
+    a = [fm.draw_outcome() for _ in range(32)]
+    fm.state_restore(snap)
+    b = [fm.draw_outcome() for _ in range(32)]
+    assert a == b
+
+
+def test_duplicates_never_double_merge():
+    """A duplicate-only fault model must not change the trajectory at
+    all: every duplicate is deduped before the merge, so the only effect
+    is the discarded copies' billed bytes."""
+    for policy, kw in (("sync", {}), ("async", {"buffer_size": 3})):
+        fl = dict(duplicate_rate=0.6, reorder_jitter=0.003)
+        hf = _spec(policy, kw, "eager", fl=fl).build()
+        sf = hf.run()
+        h0 = _spec(policy, kw, "eager",
+                   fl=dict(), telemetry=True).build()
+        assert h0.sim._faults is None
+        s0 = h0.run()
+        assert np.array_equal(np.asarray(hf.sim.state.w_tau),
+                              np.asarray(h0.sim.state.w_tau))
+        n_dups = sf["faults"]["duplicates_discarded"]
+        assert n_dups > 0
+        up_b = hf.sim.up_bytes_per_client
+        assert sf["bytes_up"] - s0["bytes_up"] == pytest.approx(
+            n_dups * up_b)
+        assert sf["bytes_down"] == s0["bytes_down"]
+
+
+def test_corrupt_payloads_screened_and_quarantined():
+    """corrupt_rate=1.0: nothing ever merges, every attempt is rejected,
+    and the whole fleet ends up quarantined (then nothing is contacted,
+    so rounds abandon without bytes)."""
+    fl = dict(corrupt_rate=1.0, quarantine_after=1, quarantine_rounds=2)
+    h = _spec("sync", {}, "eager", rounds=5, fl=fl).build()
+    s = h.run()
+    assert s["faults"]["corrupt_rejected"] > 0
+    assert s["faults"]["quarantines"] > 0
+    assert s["abandoned_rounds"] > 0
+    # the model parameters never moved: every payload was screened out
+    assert np.array_equal(np.asarray(h.sim.state.w_tau), np.zeros(N))
+
+
+# ---------------------------------------------------------------------------
+# spec surface
+# ---------------------------------------------------------------------------
+
+def test_zero_rate_spec_builds_no_fault_model():
+    """All-zero rates (even with non-default retry/quarantine knobs)
+    build NO FaultModel: the pre-fault code path, byte-identical."""
+    spec = _spec("sync", {}, "eager",
+                 fl=dict(max_retries=7, quarantine_rounds=9, seed=42))
+    h = spec.build()
+    assert h.sim._faults is None and h.sim.sim.faults is None
+    assert "faults" not in h.run()
+    assert build_fault_model(None, M) is None
+    assert build_fault_model(FaultConfig(), M) is None
+    with pytest.raises(ValueError, match="nonzero rate"):
+        FaultModel(FaultConfig(), M)
+
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(drop_rate=1.5), r"\[faults\] drop_rate"),
+    (dict(drop_rate=float("nan")), r"\[faults\] drop_rate"),
+    (dict(transient_rate=-0.1), r"\[faults\] transient_rate"),
+    (dict(drop_rate=0.5, transient_rate=0.4, corrupt_rate=0.2), "partition"),
+    (dict(max_retries=-1), "max_retries"),
+    (dict(backoff_base=0.0), "backoff_base"),
+    (dict(backoff_factor=0.5), "backoff_factor"),
+    (dict(reorder_jitter=-1.0), "reorder_jitter"),
+    (dict(reorder_jitter=float("inf")), "reorder_jitter"),
+    (dict(quarantine_after=0), "quarantine_after"),
+    (dict(quarantine_rounds=0), "quarantine_rounds"),
+    (dict(corrupt_mode="zap"), "corrupt_mode"),
+    (dict(seed=-1), "seed"),
+])
+def test_fault_spec_validation_rejects(bad, match):
+    spec = ExperimentSpec(task=TaskSpec(kind="logreg", m=M, n=N, d=200),
+                          name="x", seed=0)
+    spec = dataclasses.replace(spec, faults=FaultSpec(**bad))
+    with pytest.raises(SpecError, match=match):
+        spec.validate()
+
+
+def test_fault_spec_toml_roundtrip(tmp_path):
+    spec = _spec("sync", {}, "eager")
+    f = tmp_path / "faulty.toml"
+    spec.dump(f)
+    assert ExperimentSpec.load(f) == spec
+    assert "[faults]" in f.read_text()
+
+
+def test_cli_fault_flags(tmp_path):
+    """The --fault-* flags reach the fault model (summary carries the
+    counters), same seed reproduces, and the flags conflict with
+    --spec."""
+    outs = []
+    for i in range(2):
+        p = tmp_path / f"run{i}.json"
+        rc = simulate.main([
+            "--alg", "fedepm", "--aggregation", "sync",
+            "--m", "8", "--d", "400", "--rounds", "4", "--seed", "3",
+            "--fault-drop", "0.2", "--fault-transient", "0.3",
+            "--fault-max-retries", "1", "--fault-seed", "11",
+            "--quiet", "--json", str(p)])
+        assert rc == 0
+        outs.append(json.loads(p.read_text()))
+    assert outs[0] == outs[1]
+    fl = outs[0]["faults"]
+    assert fl["upload_drops"] + fl["retries"] > 0
+    with pytest.raises(SystemExit):
+        simulate.main(["--spec", "examples/specs/fig8_faults.toml",
+                       "--fault-drop", "0.5", "--quiet"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: availability domain (0, 1]
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("avail", [0.0, -0.5, 1.5, float("nan")])
+def test_make_profiles_rejects_bad_availability(avail):
+    with pytest.raises(ValueError, match="availability"):
+        make_profiles(4, availability=avail)
+
+
+def test_make_profiles_accepts_domain_edges():
+    assert make_profiles(4, availability=1.0).availability.tolist() \
+        == [1.0] * 4
+    assert make_profiles(4, availability=1e-9).m == 4
+
+
+@pytest.mark.parametrize("avail", ["0.0", "-1.0", "nan", "inf"])
+def test_trace_loader_rejects_bad_availability(avail):
+    rows = [{"speed": 1.0, "bw_up": 1e6, "bw_down": 1e7,
+             "availability": avail}]
+    with pytest.raises(ValueError, match="availability|finite"):
+        LatencyTrace.from_rows(rows)

@@ -185,7 +185,11 @@ def test_unavailable_clients_never_aggregate(task):
     batches, loss = task
     cfg = fedepm.FedEPMConfig.paper_defaults(m=M, rho=0.5, k0=4, eps_dp=0.0)
     s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
-    profiles = make_profiles(M, seed=1, availability=0.0)  # everyone offline
+    # everyone offline: the scalar make_profiles arg rejects 0 (outside
+    # its documented (0, 1] domain), so zero out the array directly
+    import dataclasses
+    profiles = dataclasses.replace(make_profiles(M, seed=1),
+                                   availability=np.zeros(M))
     sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
                  loss_fn=loss, profiles=profiles,
                  sim=SimConfig(policy="sync", seed=2))

@@ -129,9 +129,13 @@ def test_async_all_offline_abandons(task):
     batches, loss = task
     cfg = _cfg()
     s0 = fedepm.init_state(jax.random.PRNGKey(0), jnp.zeros(N), cfg)
+    # the scalar make_profiles arg rejects 0 (documented domain (0, 1]),
+    # so zero out the availability array directly
+    import dataclasses
     sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
                  loss_fn=loss,
-                 profiles=make_profiles(M, seed=1, availability=0.0),
+                 profiles=dataclasses.replace(make_profiles(M, seed=1),
+                                              availability=np.zeros(M)),
                  sim=SimConfig(policy="async", seed=2))
     m = sim.step()
     assert m.abandoned and m.n_aggregated == 0

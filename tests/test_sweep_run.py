@@ -270,6 +270,35 @@ def test_benchmark_runner_exits_nonzero_but_isolates(monkeypatch, capsys):
     assert bench_run.main(["--quick", "--only", "fig2,ens"]) == 0
 
 
+def test_benchmark_runner_forwards_jobs_uniformly(monkeypatch, capsys):
+    """--jobs reaches EVERY spec-grid module (fig6/fig7/fig8/engine) --
+    the sweep-driver parallelism knob is uniform, not per-module."""
+    from benchmarks import (bench_engine, fig6_stragglers, fig7_async,
+                            fig8_faults)
+    from benchmarks import run as bench_run
+
+    seen = {}
+
+    def record(name):
+        def fake_run(**kw):
+            seen[name] = kw
+            return [(f"{name}/stub", 1.0, "ok")]
+        return fake_run
+
+    monkeypatch.setattr(fig6_stragglers, "run", record("fig6"))
+    monkeypatch.setattr(fig7_async, "run", record("fig7"))
+    monkeypatch.setattr(fig8_faults, "run", record("fig8"))
+    monkeypatch.setattr(bench_engine, "run", record("engine"))
+    rc = bench_run.main(["--quick", "--jobs", "3",
+                         "--only", "fig6,fig7,fig8,engine"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert set(seen) == {"fig6", "fig7", "fig8", "engine"}
+    for name, kw in seen.items():
+        assert kw.get("jobs") == 3, f"{name} did not receive --jobs"
+        assert f"{name}/stub,1.0,ok" in out
+
+
 # ---------------------------------------------------------------------------
 # tools/append_bench_trajectory.py: in-place replace + field-loss warning
 # ---------------------------------------------------------------------------

@@ -285,7 +285,8 @@ def test_recorder_rejects_unknown_kind():
         rec.event("warp_drive", ts=0.0, round_idx=0)
     assert set(EVENT_KINDS) == {
         "round_start", "dispatch", "upload_arrival", "merge", "abandon",
-        "codec_encode", "ledger_record"}
+        "codec_encode", "ledger_record",
+        "upload_drop", "retry", "duplicate_discard", "quarantine"}
 
 
 # ---------------------------------------------------------------------------

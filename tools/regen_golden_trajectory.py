@@ -56,8 +56,13 @@ PROFILE_SEED = 5
 HEAD = 8  # leading w_tau coordinates pinned
 
 
-def simulate_golden() -> dict[str, np.ndarray]:
-    """Run the frozen scenario and return the trajectory arrays."""
+def simulate_golden(faults=None) -> dict[str, np.ndarray]:
+    """Run the frozen scenario and return the trajectory arrays.
+
+    ``faults`` (a repro.sim.faults.FaultConfig or None) exists for the
+    zero-rate regression pin: a FaultConfig whose rates are all zero must
+    leave this trajectory bit-for-bit unchanged.
+    """
     X, y = synth.adult_like(d=D, n=N, seed=SEED)
     batches = jax.tree_util.tree_map(
         jnp.asarray, partition_iid(X, y, m=M, seed=SEED))
@@ -67,7 +72,7 @@ def simulate_golden() -> dict[str, np.ndarray]:
     s0 = fedepm.init_state(jax.random.PRNGKey(SEED), jnp.zeros(N), cfg)
     sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
                  loss_fn=loss, profiles=make_profiles(M, seed=PROFILE_SEED),
-                 sim=SimConfig(policy="sync", seed=SEED))
+                 sim=SimConfig(policy="sync", seed=SEED, faults=faults))
     objective, t_total, w_head = [], [], []
     for _ in range(ROUNDS):
         m = sim.step()
@@ -89,12 +94,14 @@ ASYNC_ROUNDS = 4      # aggregation events
 ASYNC_CHUNK = 2       # scan engine replays the run as 2 chunks
 
 
-def simulate_golden_async(engine: str = "eager") -> dict[str, np.ndarray]:
+def simulate_golden_async(engine: str = "eager",
+                          faults=None) -> dict[str, np.ndarray]:
     """Run the frozen async scenario -> trajectory arrays.
 
     ``engine`` is "eager" (per-event loop) or "scan" (record/replay in
     ASYNC_CHUNK-event chunks); both must reproduce the SAME stored
-    arrays bit-for-bit (tests/test_sim_invariants.py).
+    arrays bit-for-bit (tests/test_sim_invariants.py). ``faults`` exists
+    for the zero-rate regression pin (see ``simulate_golden``).
     """
     X, y = synth.adult_like(d=D, n=N, seed=SEED)
     batches = jax.tree_util.tree_map(
@@ -110,7 +117,8 @@ def simulate_golden_async(engine: str = "eager") -> dict[str, np.ndarray]:
         sim=SimConfig(policy="async", latency="pareto", latency_alpha=1.3,
                       seed=SEED, buffer_size=3, max_concurrency=4,
                       codec=CodecConfig(topk_frac=0.5, bits=8,
-                                        error_feedback=True)))
+                                        error_feedback=True),
+                      faults=faults))
     objective, t_total, w_head = [], [], []
 
     def observe(m):
