@@ -5,12 +5,14 @@ Full grids take tens of minutes on this CPU host; the default profile is
 a reduced-but-faithful grid (documented per module). Pass --full for the
 paper's complete grids, --quick for CI-speed smoke values.
 
-The systems modules (fig6/fig7/fig8/engine) define their grids as lists
-of declarative experiment specs (repro.spec, docs/spec.md) and execute
-every cell through the multi-cell sweep driver (repro.launch.sweep_run,
-same ``spec.build()`` path as the simulate CLI); the kwargs this driver
-passes them only size the grid, ``--jobs`` parallelizes their cells
-uniformly across all of them.
+The systems modules (fig6/fig7/fig8/fig9/engine) define their grids as
+lists of declarative experiment specs (repro.spec, docs/spec.md) and
+execute every cell through the multi-cell sweep driver
+(repro.launch.sweep_run, same ``spec.build()`` path as the simulate
+CLI); the kwargs this driver passes them only size the grid, ``--jobs``
+parallelizes their cells uniformly across all of them. fig9 (the
+upload-privacy frontier) supersedes the retired fig5 module and carries
+its claim-check rows forward.
 
 Each module runs isolated: a failure becomes a ``<name>/ERROR`` CSV row
 and the remaining modules still run -- but the invocation then exits
@@ -33,12 +35,12 @@ def main(argv=None):
                     help="comma-separated module names (fig2,fig3,...)")
     ap.add_argument("--jobs", type=int, default=1,
                     help="sweep-driver worker processes for the spec-grid "
-                         "modules (fig6/fig7/fig8/engine)")
+                         "modules (fig6/fig7/fig8/fig9/engine)")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_engine, ens_kernel, fig2_accuracy, fig3_k0,
-                            fig4_rho, fig5_privacy, fig6_stragglers,
-                            fig7_async, fig8_faults, table1_lct)
+                            fig4_rho, fig6_stragglers, fig7_async,
+                            fig8_faults, fig9_privacy, table1_lct)
 
     d = 4000 if args.quick else 45222
     trials = 1 if args.quick else (3 if not args.full else 10)
@@ -53,10 +55,6 @@ def main(argv=None):
             d=d, trials=trials,
             rho_grid=(0.2, 0.6, 1.0) if not args.full
             else (0.2, 0.4, 0.6, 0.8, 1.0)),
-        "fig5": lambda: fig5_privacy.run(
-            d=d, trials=trials,
-            eps_grid=(0.1, 0.5, 0.9) if not args.full
-            else (0.1, 0.3, 0.5, 0.7, 0.9)),
         "ens": lambda: ens_kernel.run(
             n=(1 << 12) if args.quick else (1 << 16)),
         "fig6": lambda: fig6_stragglers.run(
@@ -68,6 +66,12 @@ def main(argv=None):
         "fig8": lambda: fig8_faults.run(
             **(fig8_faults.QUICK_KW if args.quick
                else dict(d=d, m=32, rounds=60)), jobs=args.jobs),
+        "fig9": lambda: fig9_privacy.run(
+            **(fig9_privacy.QUICK_KW if args.quick
+               else dict(d=d, m=32, rounds=60,
+                         eps_grid=fig9_privacy.EPS_GRID if not args.full
+                         else (0.2, 0.5, 2.0, 8.0, 32.0))),
+            jobs=args.jobs),
         "engine": lambda: bench_engine.run(
             **(bench_engine.QUICK_KW if args.quick
                else dict(d=d, m=50, rounds=60)), jobs=args.jobs),

@@ -11,6 +11,9 @@ Two ops, each a (Pallas kernel, bit-identical jnp reference) pair:
                      leading kcols[i] live columns, pass the fallback
                      through elsewhere (the padded 2-D layout the fused
                      transport codec uses for whole-pytree encodes).
+``private_quantize_cols`` -- quantize_cols with a fused per-row clip
+                     factor and Laplace perturbation in front (the DP
+                     upload path, repro.sim.transport.private_roundtrip).
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ import jax
 from repro.kernels.quant import ref as _ref
 from repro.kernels.quant.batch import quantize_cols_pallas
 from repro.kernels.quant.ef import ef_accumulate_pallas
+from repro.kernels.quant.privacy import private_quantize_cols_pallas
 from repro.kernels.quant.quant import quantize_pallas
 
 Impl = Literal["pallas", "ref"]
@@ -92,4 +96,43 @@ def quantize_cols(X: jax.Array, F: jax.Array, scale: jax.Array,
                                     block_n=block_n, interpret=interpret)
     if impl == "ref":
         return _ref.quantize_cols_ref(X, F, scale, kcols, bits, u32)
+    raise ValueError(f"unknown quant impl {impl!r}")
+
+
+# like ef_accumulate: the ref MUST run jitted so x*clipf + b*lap fuses to
+# the same FMA the Pallas path's XLA program uses (see the note above)
+_private_ref_jit = jax.jit(_ref.private_quantize_cols_ref,
+                           static_argnames=("bits",))
+
+
+def private_quantize_cols(X: jax.Array, F: jax.Array, clipf: jax.Array,
+                          noise_b: jax.Array, scale: jax.Array,
+                          kcols: jax.Array, bits: int, u32q: jax.Array,
+                          lap: jax.Array, *, impl: Impl = "ref",
+                          block_n: int = 512,
+                          interpret: bool | None = None) -> jax.Array:
+    """Fused clip + Laplace-noise + column-bounded quantize-dequantize.
+
+    X, F: (m, n) values and fallback; clipf, noise_b, scale: (m,) per-row
+    l1-clip factor, Laplace scale, and quantizer magnitude bound (on the
+    clipped pre-noise values -- noisy outliers saturate at the grid
+    edge); kcols: (m,) live-column counts; bits: wire bits (>= 2); u32q:
+    (m, n) uint32 quantizer dither plane; lap: (m, n) float32
+    unit-Laplace noise plane, precomputed by the caller (the sim draws it
+    host-side via repro.sim.transport.draw_unit_noise so both engines and
+    both impls consume one bit-identical stream). One launch transforms a
+    whole pytree's (leaf, client) rows.
+    """
+    if X.ndim != 2 or X.shape != F.shape:
+        raise ValueError(
+            f"private_quantize_cols expects matching (m, n); got {X.shape} "
+            f"vs {F.shape}")
+    if impl == "pallas":
+        return private_quantize_cols_pallas(X, F, clipf, noise_b, scale,
+                                            kcols, bits, u32q, lap,
+                                            block_n=block_n,
+                                            interpret=interpret)
+    if impl == "ref":
+        return _private_ref_jit(X, F, clipf, noise_b, scale, kcols, bits,
+                                u32q, lap)
     raise ValueError(f"unknown quant impl {impl!r}")

@@ -97,6 +97,66 @@ def quantize_cols_ref(X: jax.Array, F: jax.Array, scale: jax.Array,
     return jnp.where(col < kcols.reshape(-1, 1).astype(jnp.int32), dq, F)
 
 
+def laplace_from_u32(u32: jax.Array) -> jax.Array:
+    """Unit-scale Laplace noise from caller-supplied uint32 bits.
+
+    Maps u32 -> u = u32 * 2^-32 - 0.5 in [-0.5, 0.5), then applies the
+    inverse CDF ``eps = -sign(u) * log1p(-2|u|)`` (the same transform
+    ``repro.core.dp.sample_laplace`` uses). ``|u|`` is clamped a hair
+    below 0.5 so the u32 == 0 endpoint cannot produce an infinity. The
+    bits are SUPPLIED (never drawn here) so the Pallas kernel and this
+    reference consume the identical stream and agree bit-for-bit.
+    """
+    u = u32.astype(jnp.float32) * _INV_2_32 - 0.5
+    a = jnp.minimum(2.0 * jnp.abs(u), 1.0 - 1e-7)
+    return -jnp.sign(u) * jnp.log1p(-a)
+
+
+def private_quantize_cols_ref(X: jax.Array, F: jax.Array, clipf: jax.Array,
+                              noise_b: jax.Array, scale: jax.Array,
+                              kcols: jax.Array, bits: int, u32q: jax.Array,
+                              lap: jax.Array) -> jax.Array:
+    """Fused clip + Laplace-noise + column-bounded quantize (upload DP).
+
+    Per row i (one (leaf, client) pair of the batched upload layout):
+
+        y[i, j]   = X[i, j] * clipf[i] + noise_b[i] * lap[i, j]
+        out[i, j] = Q_bits(y[i, j]; scale[i])  if j <  kcols[i]
+                    F[i, j]                    otherwise
+
+    ``clipf`` is the per-client l1-clip factor (1.0 in surrogate mode),
+    ``noise_b`` the per-client Laplace scale ``b = delta_hat / eps`` --
+    both computed host/caller-side from static config so the kernel stays
+    branch-free. ``lap`` is the UNIT-scale Laplace plane, float32,
+    supplied by the caller (the sim draws it host-side in a standalone
+    program, ``repro.sim.transport.draw_unit_noise``): like the dither,
+    noise enters as data so the Pallas kernel, this reference, and both
+    sim engines consume the identical stream -- and because the
+    ``log1p`` inverse CDF is a transcendental whose last ulp shifts with
+    XLA:CPU's fusion context, computing it in-kernel would break the
+    engines' bit-for-bit contract. ``scale`` is the caller's bound on the
+    CLIPPED, pre-noise magnitudes, so a noisy value can land past the
+    grid edge and saturate at +-L*delta -- bounded-output behavior that
+    is standard for quantized DP uploads (docs/privacy.md); an all-zero
+    row (scale 0) quantizes to exact zeros, noise included. X, F, u32q,
+    lap: (m, n); clipf, noise_b, scale: (m,); kcols: (m,) int32.
+    """
+    L = quant_levels(bits)
+    x = X.astype(jnp.float32)
+    cf = clipf.astype(jnp.float32).reshape(-1, 1)
+    b = noise_b.astype(jnp.float32).reshape(-1, 1)
+    y = x * cf + b * lap.astype(jnp.float32)
+    s = scale.astype(jnp.float32).reshape(-1, 1)
+    delta = s * (1.0 / L)  # mul-by-reciprocal: see the note on quantize_ref
+    safe = jnp.where(delta > 0, delta, 1.0)
+    u = u32q.astype(jnp.float32) * _INV_2_32
+    q = jnp.floor(y / safe + u)
+    q = jnp.clip(q, -L, L)
+    dq = jnp.where(delta > 0, q * safe, 0.0).astype(X.dtype)
+    col = jnp.arange(X.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.where(col < kcols.reshape(-1, 1).astype(jnp.int32), dq, F)
+
+
 def ef_accumulate_ref(Z: jax.Array, H: jax.Array, scale: jax.Array, bits: int,
                       u32: jax.Array | None = None) -> jax.Array:
     """Error-feedback accumulate/compress step: H + Q_bits(Z - H), row-wise.

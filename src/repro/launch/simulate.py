@@ -74,6 +74,7 @@ from repro.spec import (
     FaultSpec,
     FleetSpec,
     PolicySpec,
+    PrivacySpec,
     SpecError,
     TaskSpec,
 )
@@ -140,6 +141,19 @@ def spec_from_args(args) -> ExperimentSpec:
                 for flag, spec_field in _FAULT_FLAGS.items()
                 if getattr(args, flag, None) is not None}
 
+    privacy_kw = {}
+    if getattr(args, "dp_eps", None) is not None:
+        privacy_kw["eps"] = args.dp_eps
+    if getattr(args, "dp_clip", None) is not None:
+        # an explicit clip bound selects the enforced-clip sensitivity
+        # mode (the surrogate mode never clips)
+        privacy_kw["sensitivity"] = "clip"
+        privacy_kw["clip"] = args.dp_clip
+    if getattr(args, "secure_agg", False):
+        privacy_kw["secure_agg"] = True
+    if getattr(args, "privacy_seed", None) is not None:
+        privacy_kw["seed"] = args.privacy_seed
+
     return ExperimentSpec(
         name=f"cli/{args.alg}-{args.aggregation}",
         seed=args.seed,
@@ -152,6 +166,7 @@ def spec_from_args(args) -> ExperimentSpec:
                         impl=args.quant_impl,
                         error_feedback=args.error_feedback),
         faults=FaultSpec(**fault_kw),
+        privacy=PrivacySpec(**privacy_kw),
         engine=EngineSpec(name=args.engine, rounds=args.rounds,
                           terminate=args.terminate))
 
@@ -339,6 +354,26 @@ def main(argv=None):
                     help="fault injection: dedicated RNG seed (default: "
                          "derived from --seed; fault draws never perturb "
                          "the latency stream)")
+    ap.add_argument("--dp-eps", type=float, default=None,
+                    help="upload privacy: per-round per-client DP epsilon "
+                         "budget; uploads are Laplace-noised on the wire "
+                         "and the accountant tracks spent budget "
+                         "(docs/privacy.md). Distinct from the "
+                         "in-algorithm --eps noise")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="upload privacy: enforce ||z||_1 <= clip before "
+                         "noising and use the data-independent 2*clip "
+                         "sensitivity (default: the paper's 2*||z||_1 "
+                         "surrogate; requires --dp-eps)")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="upload privacy: bill one pairwise-mask exchange "
+                         "per upload attempt that reaches the wire "
+                         "(32 bytes each; composes with --fault-* retries)")
+    ap.add_argument("--privacy-seed", type=int, default=None,
+                    help="upload privacy: dedicated noise-stream seed "
+                         "(default: derived from --seed; noise draws never "
+                         "perturb the latency or codec streams; requires "
+                         "--dp-eps or --secure-agg)")
     ap.add_argument("--seed", dest="seed_flag", type=int, default=None,
                     help="master seed (default 0, or the spec file's)")
     ap.add_argument("--terminate", dest="terminate_flag",
@@ -392,6 +427,8 @@ def main(argv=None):
                              "rho", "k0", "eps", "topk", "bits",
                              "error_feedback", "quant_impl",
                              *sorted(_FAULT_FLAGS),
+                             "dp_eps", "dp_clip", "secure_agg",
+                             "privacy_seed",
                              *sorted(ASYNC_KNOBS))
                    if getattr(args, k) != ap.get_default(k)]
         if ignored:
@@ -408,6 +445,15 @@ def main(argv=None):
     if args.error_feedback and args.topk >= 1.0 and args.bits == 0:
         ap.error("--error-feedback needs a lossy codec: set --topk < 1 "
                  "and/or --bits > 0")
+    # privacy knob ownership, mirroring the spec layer: a knob supplied
+    # without the state it configures is an error, never silently unused
+    if args.dp_clip is not None and not (args.dp_eps and args.dp_eps > 0):
+        ap.error("--dp-clip bounds the DP noise sensitivity; it requires "
+                 "--dp-eps > 0")
+    if args.privacy_seed is not None and not (
+            (args.dp_eps and args.dp_eps > 0) or args.secure_agg):
+        ap.error("--privacy-seed keys the privacy noise stream; it "
+                 "requires --dp-eps > 0 or --secure-agg")
     if args.trace_file and args.availability != 1.0:
         ap.error("--availability conflicts with --trace-file: the trace's "
                  "own availability column defines the fleet")

@@ -1,0 +1,24 @@
+"""Privacy subsystem: DP accounting, noise/clip config, secure-agg masking.
+
+This package owns the transport-layer privacy axis of the simulation
+(paper Sec. V, Setup V.1, Thm V.1): a declarative ``[privacy]`` spec
+section (``repro.spec.types.PrivacySpec``) builds a
+:class:`~repro.privacy.accounting.PrivacyModel` that the server runtime
+(``repro.sim.server``) consults at merge and billing points, while the
+actual clip/noise/quantize transform runs device-side through
+``repro.sim.transport.private_roundtrip`` and the fused kernel in
+``repro.kernels.quant``.
+
+An all-default (or otherwise inert) config builds NO model at all --
+``build_privacy_model`` returns None -- so the pre-privacy code paths and
+golden trajectories stay byte-identical (tests/test_privacy.py pins it).
+"""
+from __future__ import annotations
+
+from repro.privacy.accounting import (  # noqa: F401
+    MECHANISMS,
+    SENSITIVITY_MODES,
+    PrivacyConfig,
+    PrivacyModel,
+    build_privacy_model,
+)

@@ -87,6 +87,22 @@ same pump defenses as eager -- no compiled program changes at all, so
 fault-injected trajectories and telemetry streams stay bit-for-bit
 across engines (tests/test_faults.py).
 
+Upload privacy (``SimConfig.privacy``, repro.privacy) splits the same
+way: the clip transform is device work, so a noisy config swaps the
+chunk bodies' codec round-trips for the private ones
+(``transport.private_roundtrip`` / ``private_ef_roundtrip``), while the
+noise DRAWS are host work fed in as data -- ``run_rounds`` stacks one
+``transport.draw_unit_noise`` tree per round (privacy stream folded on
+the round index) into the clocked scan's xs, and the async replay
+stacks one per recorded merge (folded on the upload serial), the exact
+draws the eager merge programs consume, so noisy trajectories stay
+bit-for-bit across engines (tests/test_privacy.py; see
+``draw_unit_noise`` for why in-body transcendentals would break this).
+The accountant and secure-agg mask billing are host bookkeeping,
+emitted by the SAME ``server.apply_clocked_privacy`` helper the eager
+step calls (async charges live inside the shared pump, which the
+recording pass runs).
+
 Client-axis sharding: ``run_rounds(..., mesh=...)`` lays the stacked
 (m, ...) state leaves out over a device mesh's "data" axis (the repo's
 logical rule client -> data, sharding/rules.py + specs.leaf_spec rails)
@@ -108,10 +124,12 @@ from repro.core import baselines, fedepm, participation
 from repro.core.treeutil import tmap, tree_where, tree_where_client
 from repro.sim import clients as simclients
 from repro.sim.server import (_EAGER_ASYNC_EXEC, _EV_UPLOAD, FedSim,
-                              SimMetrics, copy_tree,
+                              SimMetrics, apply_clocked_privacy, copy_tree,
                               emit_clocked_round_events, fifo_cache_get,
                               make_sim_metrics, merge_contribution)
-from repro.sim.transport import codec_roundtrip, ef_roundtrip
+from repro.sim.transport import (codec_roundtrip, draw_unit_noise,
+                                 ef_roundtrip, private_ef_roundtrip,
+                                 private_roundtrip)
 
 _SCAN_POLICIES = ("sync", "deadline", "adaptive", "overselect")
 
@@ -261,7 +279,7 @@ def _candidate_stream_fn(sim: FedSim):
 
 def _chunk_fn(sim: FedSim, collect_w_tau: bool):
     key = (sim._round_fn, sim._loss_fn, sim.cfg, sim.sim.codec, sim._ef,
-           collect_w_tau, id(sim._batches))
+           sim._privacy_tx, collect_w_tau, id(sim._batches))
     return fifo_cache_get(_CHUNK_FN_CACHE, key,
                           lambda: _build_chunk_fn(sim, collect_w_tau),
                           cap=32)
@@ -335,6 +353,7 @@ def _build_chunk_fn(sim: FedSim, collect_w_tau: bool):
     round_fn = sim._round_fn
     batches, loss_fn, cfg = sim._batches, sim._loss_fn, sim.cfg
     codec, ef = sim.sim.codec, sim._ef
+    privacy = sim._privacy_tx
     if sim.alg == "fedepm":
         def core_body(st, xs):
             return fedepm.scan_round(st, xs, batches, loss_fn, cfg)
@@ -343,17 +362,35 @@ def _build_chunk_fn(sim: FedSim, collect_w_tau: bool):
             return baselines.scan_round(st, xs, batches, loss_fn, cfg,
                                         round_fn)
 
-    def chunk(state, H, codec_key, masks, abandoned, round_idx):
+    def chunk(state, H, codec_key, masks, abandoned, round_idx, noise):
         def body(carry, x):
             st, Hc = carry
-            mask, ab, ridx = x
-            if codec is None:
+            mask, ab, ridx, ns = x
+            if codec is None and privacy is None:
                 st2, rm = core_body(st, (mask, ab))
                 ys = (rm, st2.w_tau) if collect_w_tau else (rm,)
                 return (st2, Hc), ys
             new_st, rm = round_fn(st, batches, loss_fn, cfg, mask=mask)
             ckey = jax.random.fold_in(codec_key, ridx)
-            if ef:
+            if privacy is not None:
+                # noisy merge: same private round-trips as the eager
+                # server's merge programs; the round's unit-noise tree
+                # arrives as scan xs (host-drawn by run_rounds from the
+                # dedicated privacy stream -- data, so both engines
+                # perturb bit-identically)
+                if ef:
+                    dec = private_ef_roundtrip(new_st.Z, Hc, ckey, ns,
+                                               codec, privacy)
+                    new_st = new_st._replace(
+                        Z=tree_where_client(mask, dec, st.Z))
+                    Hn = tree_where_client(mask, dec, Hc)
+                else:
+                    dec = private_roundtrip(new_st.Z, st.Z, ckey, ns,
+                                            codec, privacy)
+                    new_st = new_st._replace(
+                        Z=tree_where_client(mask, dec, st.Z))
+                    Hn = Hc
+            elif ef:
                 dec = ef_roundtrip(new_st.Z, Hc, ckey, codec)
                 new_st = new_st._replace(
                     Z=tree_where_client(mask, dec, st.Z))
@@ -368,7 +405,8 @@ def _build_chunk_fn(sim: FedSim, collect_w_tau: bool):
             ys = (rm, st2.w_tau) if collect_w_tau else (rm,)
             return (st2, Hc2), ys
 
-        return jax.lax.scan(body, (state, H), (masks, abandoned, round_idx))
+        return jax.lax.scan(body, (state, H),
+                            (masks, abandoned, round_idx, noise))
 
     return jax.jit(chunk, donate_argnums=(0, 1))
 
@@ -542,7 +580,7 @@ class _RecordAsyncExec:
 
 def _async_chunk_fn(sim: FedSim, collect_w_tau: bool):
     key = ("async", sim._round_fn, sim._loss_fn, sim.cfg, sim.sim.codec,
-           sim._ef, collect_w_tau, id(sim._batches))
+           sim._ef, sim._privacy_tx, collect_w_tau, id(sim._batches))
     return fifo_cache_get(
         _CHUNK_FN_CACHE, key,
         lambda: _build_async_chunk_fn(sim, collect_w_tau), cap=32)
@@ -578,6 +616,7 @@ def _build_async_chunk_fn(sim: FedSim, collect_w_tau: bool):
     round_fn = sim._round_fn
     batches, loss_fn, cfg = sim._batches, sim._loss_fn, sim.cfg
     codec, ef = sim.sim.codec, sim._ef
+    privacy = sim._privacy_tx
     use_agg = sim.alg != "fedepm"
 
     def chunk(state, H, tz, tw, ws, codec_key, xs):
@@ -610,9 +649,14 @@ def _build_async_chunk_fn(sim: FedSim, collect_w_tau: bool):
             def mbody(mc, mx):
                 stc, Hcc = mc
                 ckey = jax.random.fold_in(codec_key, mx["serial"])
+                # this merge's host-drawn unit-noise tree rides the xs
+                # row (replayed from the SAME per-serial draws the eager
+                # merge executor makes); absent on the no-noise path
+                ns = mx["noise"] if privacy is not None else None
                 Z, W, Hn = merge_contribution(
                     stc.Z, stc.W, Hcc, tz2, tw2, mx["slot"], mx["client"],
-                    mx["gamma"], ckey, codec=codec, ef=ef)
+                    mx["gamma"], ckey, ns, codec=codec, ef=ef,
+                    privacy=privacy)
                 mv = mx["valid"]
                 stn = stc._replace(Z=tree_where(mv, Z, stc.Z),
                                    W=tree_where(mv, W, stc.W))
@@ -724,14 +768,35 @@ def _record_replay_chunk(sim: FedSim, C: int, collect_w_tau: bool,
                        sim.state.w_tau)
         else:
             ws0 = jnp.zeros((), jnp.float32)
+        merges_x = {"valid": jnp.asarray(mvalid),
+                    "slot": jnp.asarray(mslot),
+                    "client": jnp.asarray(mclient),
+                    "serial": jnp.asarray(mserial),
+                    "gamma": jnp.asarray(mgamma)}
+        if sim._privacy_tx is not None:
+            # per-merge unit noise replayed from the SAME standalone
+            # program (and the same per-serial key folds) the eager merge
+            # executor uses, stacked to (n_pad, m_pad, 1, ...) xs rows;
+            # invalid/padded merge slots carry zeros (their merges are
+            # masked off, the values never land)
+            like = sim._noise_row_like
+            zero = tmap(lambda sd: jnp.zeros(sd.shape, sd.dtype), like)
+            flat = [draw_unit_noise(
+                jax.random.fold_in(sim._privacy_key, int(mserial[i, j])),
+                like, sim._privacy_tx) if mvalid[i, j] else zero
+                for i in range(n_pad) for j in range(m_pad)]
+            if flat:
+                merges_x["noise"] = tmap(
+                    lambda *ls: jnp.stack(ls).reshape(
+                        (n_pad, m_pad) + ls[0].shape), *flat)
+            else:
+                merges_x["noise"] = tmap(
+                    lambda sd: jnp.zeros((n_pad, m_pad) + sd.shape,
+                                         sd.dtype), like)
         xs = {"fire_valid": jnp.asarray(fire_valid),
               "mask": jnp.asarray(mask), "agg": jnp.asarray(agg),
               "slot_src": jnp.asarray(slot_src), "step": jnp.asarray(step),
-              "merges": {"valid": jnp.asarray(mvalid),
-                         "slot": jnp.asarray(mslot),
-                         "client": jnp.asarray(mclient),
-                         "serial": jnp.asarray(mserial),
-                         "gamma": jnp.asarray(mgamma)}}
+              "merges": merges_x}
         state, H, tz, tw, ws, rms = fn(sim.state, H, table.z, table.w,
                                        ws0, sim._codec_key, xs)
         sim.state = state
@@ -930,10 +995,23 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
             raise RuntimeError("abandoned-round fixpoint did not converge")
         # 4. one donated scan over the chunk
         ridx0 = sim.round_idx
+        if sim._privacy_tx is not None:
+            # per-round unit noise, drawn host-side through the SAME
+            # standalone program the eager step uses (one draw per round,
+            # privacy stream folded on the round index), stacked as xs --
+            # see transport.draw_unit_noise for why the draws must enter
+            # the chunk as data rather than be computed in-body
+            draws = [draw_unit_noise(
+                jax.random.fold_in(sim._privacy_key, r),
+                sim.state.Z, sim._privacy_tx)
+                for r in range(ridx0, ridx0 + C)]
+            noise = tmap(lambda *ls: jnp.stack(ls), *draws)
+        else:
+            noise = None
         (sim.state, H), ys = chunk_fn(
             sim.state, H, sim._codec_key,
             jnp.asarray(masks), jnp.asarray(abandoned),
-            jnp.arange(ridx0, ridx0 + C, dtype=jnp.int32))
+            jnp.arange(ridx0, ridx0 + C, dtype=jnp.int32), noise)
         rm_stack = ys[0]
         if collect_w_tau:
             w_parts.append(np.asarray(jax.device_get(ys[1])))
@@ -956,6 +1034,10 @@ def run_rounds(sim: FedSim, rounds: int, *, chunk: int | None = None,
                     mask=masks[t], dur=dur, rec_up=rec_ups[t],
                     abandoned=bool(abandoned[t]), codec=sim.sim.codec,
                     up_bytes=sim._up_bytes, faults=fouts[t])
+            apply_clocked_privacy(
+                sim._privacy, sim.telemetry, round_idx=sim.round_idx,
+                t_end=sim.t + dur, mask=masks[t], rec_up=rec_ups[t],
+                faults=fouts[t])
             if fouts[t] is None:
                 brec = sim.ledger.record_round(
                     down_mask=cands_eff[t], up_mask=rec_ups[t],

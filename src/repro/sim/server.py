@@ -107,6 +107,23 @@ like a deadline miss. All decisions are host-side and replayed
 identically by the scan engine, so fault-injected runs stay bit-for-bit
 across engines; ``faults=None`` (any zero-rate config) leaves every path
 above byte-identical to the fault-free simulator.
+
+Upload privacy (SimConfig.privacy, repro.privacy)
+-------------------------------------------------
+With a ``PrivacyConfig`` attached the upload path runs through
+``transport.private_roundtrip`` (clip + calibrated DP noise in front of
+the codec, fused into one kernel launch on the dense quantized Laplace
+configuration), a host-side per-client accountant charges ``eps`` for
+every MERGED contribution (``privacy_charge`` telemetry events), and --
+with secure aggregation on -- every upload attempt that reaches the wire
+carries ``mask_bytes`` of pairwise-mask exchange, folded into the
+per-upload wire size so the ByteLedger bills masks under exactly the
+same rule as payloads (clean arrivals + retries + discarded duplicates).
+Noise is drawn from a dedicated privacy key stream
+(``fold_in(privacy_key, round_idx)`` clocked, ``fold_in(privacy_key,
+serial)`` async), so both engines reproduce every draw bit-for-bit;
+``privacy=None`` (or any inert config) leaves every path above
+byte-identical to the pre-privacy simulator.
 """
 from __future__ import annotations
 
@@ -124,6 +141,7 @@ import numpy as np
 
 from repro.core import baselines, fedepm, participation
 from repro.core.treeutil import tmap, tree_size, tree_where_client
+from repro.privacy import PrivacyConfig, build_privacy_model
 from repro.sim import clients as simclients
 from repro.sim.faults import FaultConfig, FaultRoundOutcome, build_fault_model
 from repro.sim.transport import (
@@ -131,8 +149,11 @@ from repro.sim.transport import (
     CodecConfig,
     codec_event_attrs,
     codec_roundtrip,
+    draw_unit_noise,
     ef_roundtrip,
     encoded_client_bytes,
+    private_ef_roundtrip,
+    private_roundtrip,
     tree_client_bytes,
 )
 from repro.telemetry.events import NULL_RECORDER
@@ -173,6 +194,8 @@ class SimConfig:
     ewma_beta: float = 0.3          # EWMA weight of the newest observation
     # fault injection (repro.sim.faults); None = the fault-free simulator
     faults: FaultConfig | None = None
+    # upload privacy (repro.privacy); None = the pre-privacy simulator
+    privacy: PrivacyConfig | None = None
 
 
 class SimMetrics(NamedTuple):
@@ -275,6 +298,40 @@ def emit_clocked_round_events(rec, *, policy: str, round_idx: int,
     rec.event("merge", ts=t_end, round_idx=round_idx, n=n_agg, t_round=dur)
 
 
+def apply_clocked_privacy(privacy, rec, *, round_idx: int, t_end: float,
+                          mask: np.ndarray, rec_up: np.ndarray,
+                          faults: "FaultRoundOutcome | None" = None) -> None:
+    """One clocked round's privacy bookkeeping (accountant + mask billing).
+
+    Shared by the eager server and the scan engine's host loop, called
+    right after ``emit_clocked_round_events`` with the same host arrays,
+    so accountant totals and the ``privacy_charge``/``mask_exchange``
+    event stream are identical between engines. ``privacy`` is the
+    ``PrivacyModel`` (None = no-op). Mask attempts equal the round's
+    billed upload count -- delivered uploads plus every fault attempt
+    that reached the wire -- which is exactly what the ByteLedger's count
+    path charges, so mask bytes and ledger bytes cannot drift. Charges
+    apply to MERGED clients only (the mask), never to stragglers or
+    fault-lost uploads: their noisy payloads were never consumed.
+    """
+    if privacy is None:
+        return
+    cfg = privacy.cfg
+    attempts = int(np.asarray(rec_up).sum())
+    if faults is not None:
+        attempts += int(faults.extra_up.sum())
+    mbytes = privacy.bill_masks(attempts)
+    if cfg.secure_agg and attempts and rec.enabled:
+        rec.event("mask_exchange", ts=t_end, round_idx=round_idx,
+                  attempts=attempts, bytes=mbytes)
+    if cfg.eps > 0:
+        for i in np.flatnonzero(np.asarray(mask)):
+            tot = privacy.charge(int(i))
+            if rec.enabled:
+                rec.event("privacy_charge", ts=t_end, round_idx=round_idx,
+                          client=int(i), eps=cfg.eps, eps_total=tot)
+
+
 @dataclasses.dataclass
 class _Contribution:
     """One in-flight client upload (async policy).
@@ -306,7 +363,8 @@ class _Contribution:
 
 
 def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
-                       key, *, codec: CodecConfig | None, ef: bool):
+                       key, noise, *, codec: CodecConfig | None, ef: bool,
+                       privacy: PrivacyConfig | None = None):
     """Fold one arrived upload into the server's stacked state (PURE).
 
     The ONE merge/staleness function both engines call: the eager event
@@ -326,6 +384,15 @@ def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
     what makes the zero-staleness trajectory bit-identical to sync. W_i is
     replaced outright -- it is the client's own iterate, which the client
     reports authoritatively; only the aggregate-facing Z is down-weighted.
+
+    With a noisy ``privacy`` config the decode runs through the private
+    round-trips instead (clip + DP noise in front of the codec); ``noise``
+    is the contribution's (1, ...) unit-noise tree, host-drawn from the
+    privacy stream folded on the upload serial
+    (``transport.draw_unit_noise`` -- data, so eager and scan consume
+    bit-identical draws). Privacy None (or eps == 0) reduces every branch
+    to the historical path bit-for-bit and ``noise`` is unused (callers
+    pass None).
     """
     def row(tree):
         return tmap(
@@ -344,14 +411,19 @@ def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
     z_row = batch(z_batch)
     w_row = batch(w_batch)
 
-    if codec is None:
+    noisy = privacy is not None and privacy.eps > 0
+    if codec is None and not noisy:
         z_hat = z_row
         H_new = H
     elif ef:
-        z_hat = ef_roundtrip(z_row, row(H), key, codec)
+        z_hat = (private_ef_roundtrip(z_row, row(H), key, noise, codec,
+                                      privacy) if noisy
+                 else ef_roundtrip(z_row, row(H), key, codec))
         H_new = set_row(H, z_hat)
     else:
-        z_hat = codec_roundtrip(z_row, row(Z), key, codec)
+        z_hat = (private_roundtrip(z_row, row(Z), key, noise, codec, privacy)
+                 if noisy
+                 else codec_roundtrip(z_row, row(Z), key, codec))
         H_new = H
 
     def zmerge(zl, r):
@@ -365,7 +437,7 @@ def merge_contribution(Z, W, H, z_batch, w_batch, batch_row, idx, gamma,
 
 #: jitted entry point of :func:`merge_contribution` (the eager path)
 _merge_contribution = functools.partial(
-    jax.jit, static_argnames=("codec", "ef"))(merge_contribution)
+    jax.jit, static_argnames=("codec", "ef", "privacy"))(merge_contribution)
 
 
 def copy_tree(tree):
@@ -495,12 +567,19 @@ class _EagerAsyncExec:
               gamma: float) -> None:
         """Staleness-merge one arrived contribution into the server state."""
         key = jax.random.fold_in(sim._codec_key, c.serial)
+        # the privacy stream folds on the same serial; the unit-noise
+        # draw happens host-side in its own program (draw_unit_noise) so
+        # the scan engine's replayed merges consume bit-identical noise
+        noise = (draw_unit_noise(
+            jax.random.fold_in(sim._privacy_key, c.serial),
+            sim._noise_row_like, sim._privacy_tx)
+            if sim._privacy_tx is not None else None)
         Z, W, H = _merge_contribution(
             sim.state.Z, sim.state.W, sim._H, c.z_batch, c.w_batch,
             jnp.asarray(c.row, jnp.int32),
             jnp.asarray(c.client, jnp.int32),
-            jnp.asarray(gamma, jnp.float32), key,
-            codec=sim.sim.codec, ef=sim._ef)
+            jnp.asarray(gamma, jnp.float32), key, noise,
+            codec=sim.sim.codec, ef=sim._ef, privacy=sim._privacy_tx)
         sim.state = sim.state._replace(Z=Z, W=W)
         sim._H = H
         if c.slot >= 0 and sim._async_table is not None:
@@ -583,6 +662,22 @@ class FedSim:
         # whose draw ORDER differs between engines (the scan engine batches
         # arrival draws per chunk); None whenever no fault process can fire
         self._faults = build_fault_model(sim.faults, cfg.m)
+        # privacy accountant (None whenever the config is inert) and the
+        # noise-transform config: eps == 0 privacy (secure-agg only) bills
+        # masks but never perturbs values, so the transform -- a static
+        # operand of the merge programs -- stays None and every device
+        # path stays byte-identical to the pre-privacy simulator
+        self._privacy = build_privacy_model(sim.privacy, cfg.m)
+        self._privacy_tx = (sim.privacy if self._privacy is not None
+                            and sim.privacy.eps > 0 else None)
+        self._privacy_key = jax.random.PRNGKey(
+            (sim.privacy.seed if sim.privacy is not None else 0) ^ 0x9D1A)
+        # shape donor for per-contribution noise draws under the async
+        # policy: one (1, ...) row per Z leaf (shapes only, never
+        # materialized -- draw_unit_noise reads .shape)
+        self._noise_row_like = (tmap(
+            lambda x: jax.ShapeDtypeStruct((1,) + x.shape[1:], x.dtype),
+            state.Z) if self._privacy_tx is not None else None)
 
         jit_key = (round_fn, loss_fn, cfg, id(batches))
         self._step = _shared_jit(
@@ -630,6 +725,13 @@ class FedSim:
         # byte model from the real state trees
         self._down_bytes = float(tree_client_bytes(state.w_tau))
         self._up_bytes = float(encoded_client_bytes(state.Z, sim.codec))
+        if self._privacy is not None:
+            # the pairwise-mask exchange rides every upload attempt:
+            # folding it into the per-upload wire size makes the ledger
+            # bill masks under exactly the PR 9 fault-billing rule (clean
+            # arrivals + retries + duplicates) and slows the modeled
+            # upload transfer accordingly; 0 when secure-agg is off
+            self._up_bytes += self._privacy.mask_overhead
         self.telemetry = NULL_RECORDER if telemetry is None else telemetry
         self.ledger = ByteLedger(cfg.m, telemetry=self.telemetry)
 
@@ -639,7 +741,37 @@ class FedSim:
         self._ef = sim.codec is not None and sim.codec.error_feedback
         self._H = tmap(jnp.zeros_like, state.Z) if self._ef else None
 
-        if sim.codec is not None:
+        if self._privacy_tx is not None:
+            # noisy merge programs: the private round-trips in front of
+            # (or instead of) the codec, keyed on (codec, privacy) so the
+            # no-noise builders below keep their historical cache entries
+            codec, privacy = sim.codec, self._privacy_tx
+            if self._ef:
+
+                def build_merge_ef_priv():
+                    @jax.jit
+                    def codec_merge_ef(z_new, H, z_prev, mask, key, noise):
+                        dec = private_ef_roundtrip(z_new, H, key, noise,
+                                                   codec, privacy)
+                        return (tree_where_client(mask, dec, z_prev),
+                                tree_where_client(mask, dec, H))
+                    return codec_merge_ef
+
+                self._codec_merge_ef = _shared_jit(
+                    ("codec_merge_ef", codec, privacy), build_merge_ef_priv)
+            else:
+
+                def build_merge_priv():
+                    @jax.jit
+                    def codec_merge(z_new, z_prev, mask, key, noise):
+                        z_dec = private_roundtrip(z_new, z_prev, key, noise,
+                                                  codec, privacy)
+                        return tree_where_client(mask, z_dec, z_prev)
+                    return codec_merge
+
+                self._codec_merge = _shared_jit(
+                    ("codec_merge", codec, privacy), build_merge_priv)
+        elif sim.codec is not None:
             codec = sim.codec
             if codec.error_feedback:
 
@@ -817,7 +949,24 @@ class FedSim:
             prev_state = self.state
             new_state, rmetrics = self._step(
                 self.state, jnp.asarray(mask))
-            if self.sim.codec is not None:
+            if self._privacy_tx is not None:
+                key = jax.random.fold_in(self._codec_key, self.round_idx)
+                # host-drawn unit noise, privacy stream folded on the
+                # round index (the scan chunk feeds the SAME draws in as
+                # xs, so the two engines perturb bit-identically)
+                noise = draw_unit_noise(
+                    jax.random.fold_in(self._privacy_key, self.round_idx),
+                    prev_state.Z, self._privacy_tx)
+                if self._ef:
+                    Z_dec, self._H = self._codec_merge_ef(
+                        new_state.Z, self._H, prev_state.Z,
+                        jnp.asarray(mask), key, noise)
+                    new_state = new_state._replace(Z=Z_dec)
+                else:
+                    new_state = new_state._replace(Z=self._codec_merge(
+                        new_state.Z, prev_state.Z, jnp.asarray(mask), key,
+                        noise))
+            elif self.sim.codec is not None:
                 key = jax.random.fold_in(self._codec_key, self.round_idx)
                 if self._ef:
                     Z_dec, self._H = self._codec_merge_ef(
@@ -846,6 +995,9 @@ class FedSim:
                 arrivals=arrivals, mask=mask, dur=dur, rec_up=rec_up,
                 abandoned=bool(abandoned), codec=self.sim.codec,
                 up_bytes=self._up_bytes, faults=fo)
+        apply_clocked_privacy(
+            self._privacy, self.telemetry, round_idx=self.round_idx,
+            t_end=self.t + dur, mask=mask, rec_up=rec_up, faults=fo)
         if fo is None:
             brec = self.ledger.record_round(
                 down_mask=candidates, up_mask=rec_up,
@@ -1143,6 +1295,17 @@ class FedSim:
                     "merge", ts=self.t, round_idx=self.round_idx,
                     client=int(c.client), staleness=int(s),
                     gamma=float(gamma))
+            if self._privacy is not None and self.sim.privacy.eps > 0:
+                # charged at MERGE time -- when the noisy payload is
+                # consumed; staleness keeps the charge attributable to
+                # its dispatch round in the event stream
+                tot = self._privacy.charge(int(c.client))
+                if self.telemetry.enabled:
+                    self.telemetry.event(
+                        "privacy_charge", ts=self.t,
+                        round_idx=self.round_idx, client=int(c.client),
+                        eps=self.sim.privacy.eps, eps_total=tot,
+                        staleness=int(s))
         if buffer:
             self._version += 1
         elif self.telemetry.enabled:
@@ -1150,6 +1313,18 @@ class FedSim:
                                  round_idx=self.round_idx,
                                  n_contacted=self._ev_contacted)
 
+        if self._privacy is not None:
+            # every billed upload attempt carried one mask-pair exchange
+            # (its bytes are folded into _up_bytes, so the ledger record
+            # below charges them; this keeps the model's counters in
+            # lockstep with it)
+            attempts = int(self._ev_up.sum())
+            mbytes = self._privacy.bill_masks(attempts)
+            if self.sim.privacy.secure_agg and attempts \
+                    and self.telemetry.enabled:
+                self.telemetry.event(
+                    "mask_exchange", ts=self.t, round_idx=self.round_idx,
+                    attempts=attempts, bytes=mbytes)
         brec = self.ledger.record_counts(
             down_counts=self._ev_down, up_counts=self._ev_up,
             down_bytes=self._down_bytes, up_bytes=self._up_bytes,
@@ -1193,6 +1368,8 @@ class FedSim:
             snap["ewma"] = self.deadlines.ewma.copy()
         if self._faults is not None:
             snap["faults"] = self._faults.state_snapshot()
+        if self._privacy is not None:
+            snap["privacy"] = self._privacy.state_snapshot()
         if self.sim.policy == "async":
             snap["async"] = {
                 "version": self._version,
@@ -1231,6 +1408,8 @@ class FedSim:
             self.deadlines.ewma = snap["ewma"].copy()
         if self._faults is not None:
             self._faults.state_restore(snap["faults"])
+        if self._privacy is not None:
+            self._privacy.state_restore(snap["privacy"])
         if self.sim.policy == "async":
             a = snap["async"]
             self._version = a["version"]

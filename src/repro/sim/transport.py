@@ -61,6 +61,7 @@ format, same byte accounting.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import NamedTuple
 
@@ -69,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.quant import ops as quant_ops
+from repro.kernels.quant.ref import laplace_from_u32
 from repro.telemetry.events import NULL_RECORDER
 
 tmap = jax.tree_util.tree_map
@@ -582,3 +584,222 @@ def ef_roundtrip(tree_z, tree_h, key: jax.Array, codec: CodecConfig | None):
         for i, leaf in zip(gp.index, dec):
             out[i] = leaf
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# private round-trip (clip + DP noise in front of the codec)
+# ---------------------------------------------------------------------------
+
+def _gaussian_from_u32(u32: jax.Array) -> jax.Array:
+    """Unit-scale Gaussian noise from uint32 bits via the inverse CDF.
+
+    Counterpart of ``kernels.quant.ref.laplace_from_u32`` for the gaussian
+    mechanism (sequential path only; the fused kernel is Laplace-only).
+    The uniform is clamped away from {0, 1} so ndtri stays finite.
+    """
+    u = u32.astype(jnp.float32) * float(2.0 ** -32)
+    u = jnp.clip(u, 1e-7, 1.0 - 1e-7)
+    return jax.scipy.special.ndtri(u).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("shapes", "mechanism"))
+def _draw_noise_leaves(pkey: jax.Array, *, shapes, mechanism: str):
+    """Standalone unit-noise program: one leaf of noise per shape.
+
+    ``pkey`` splits per leaf in flatten order; each leaf's uint32 stream
+    maps through the mechanism's inverse CDF. This is its OWN compiled
+    program, never inlined into a merge or scan body -- see
+    :func:`draw_unit_noise` for why that isolation is load-bearing.
+    """
+    keys = jax.random.split(pkey, len(shapes))
+    out = []
+    for shp, k in zip(shapes, keys):
+        u32 = jax.random.bits(k, shp, dtype=jnp.uint32)
+        out.append(laplace_from_u32(u32) if mechanism == "laplace"
+                   else _gaussian_from_u32(u32))
+    return out
+
+
+def draw_unit_noise(pkey: jax.Array, tree_like, privacy):
+    """Unit-scale DP noise tree (float32 leaves shaped like ``tree_like``).
+
+    BOTH engines call this from the HOST and feed the result into their
+    compiled merge programs as data, exactly like the policy mask streams
+    and the quantizer dither planes. The hoisting is a bit-exactness
+    requirement, not a convenience: the inverse-CDF transforms
+    (``log1p``/``ndtri``) are transcendentals whose last-ulp rounding
+    depends on how XLA:CPU vectorizes the fusion cluster they land in, so
+    computing them INSIDE the eager merge program and again inside the
+    scan chunk program yields values that differ by 1 ulp on some
+    elements. Drawn here, the noise comes out of one shared program and
+    enters every consumer as an unfusable input buffer, so eager and scan
+    see bit-identical draws by construction.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    shapes = tuple(tuple(x.shape) for x in leaves)
+    ns = _draw_noise_leaves(pkey, shapes=shapes,
+                            mechanism=privacy.mechanism)
+    return jax.tree_util.tree_unflatten(treedef, ns)
+
+
+def _client_l1(leaves, m: int) -> jax.Array:
+    """(m,) per-client l1 norm over a stacked tree, float32.
+
+    Summed leaf-by-leaf in flatten order, with the per-leaf row sum
+    expressed as abs(x) @ ones rather than ``jnp.sum(axis=1)``. The dot
+    form is a bit-exactness requirement, not a style choice: a fusible
+    reduce's accumulation order depends on how XLA:CPU tiles the fusion
+    it lands in (vectorized partial sums vs in-order scalar), so the
+    same row summed inside the eager merge program and inside the scan
+    chunk can differ in the last ulp -- and a 1-ulp l1 shift moves the
+    clip factor and noise scale, which the trajectory then amplifies. A
+    dot is emitted as its own computation over materialized operands in
+    every context, so both engines accumulate identically.
+    """
+    tot = jnp.zeros((m,), jnp.float32)
+    for x in leaves:
+        a = jnp.abs(x.astype(jnp.float32)).reshape(m, -1)
+        tot = tot + a @ jnp.ones((a.shape[1],), jnp.float32)
+    return tot
+
+
+def privacy_row_params(l1: jax.Array, privacy) -> tuple[jax.Array, jax.Array]:
+    """Per-client (clip factor, noise scale) from the upload l1 norms.
+
+    ``privacy`` is a ``repro.privacy.PrivacyConfig`` with ``eps > 0``.
+    Surrogate mode uses the paper's data-dependent sensitivity
+    ``delta_hat = 2 * ||z||_1`` (eq. 39) and never rescales the upload;
+    clip mode first enforces ``||z||_1 <= clip`` (the same
+    min(1, clip/||z||_1) factor as ``core.dp.clip_tree_l1``) and then
+    uses the data-independent bound ``delta_hat = 2 * clip``. Laplace
+    scale is ``b = delta_hat / eps``; the gaussian std multiplies in the
+    standard ``sqrt(2 ln(1.25/delta))`` calibration (conservative here:
+    ``||.||_2 <= ||.||_1`` so the l1 bound covers the l2 sensitivity).
+    """
+    if privacy.sensitivity == "clip":
+        clipf = jnp.minimum(
+            1.0, privacy.clip / jnp.maximum(l1, 1e-30)).astype(jnp.float32)
+        delta_hat = jnp.full_like(l1, 2.0 * privacy.clip)
+    else:
+        clipf = jnp.ones_like(l1)
+        delta_hat = 2.0 * l1
+    b = delta_hat * (1.0 / privacy.eps)
+    if privacy.mechanism == "gaussian":
+        b = b * math.sqrt(2.0 * math.log(1.25 / privacy.delta))
+    return clipf, b
+
+
+def _clip_noise_tree(tree_z, noise, clipf: jax.Array, b: jax.Array):
+    """Sequential clip + noise: z_i <- z_i * clipf_i + b_i * noise, per leaf.
+
+    ``noise`` is the host-drawn unit-noise tree (:func:`draw_unit_noise`,
+    shaped like ``tree_z``) -- an input buffer, never computed in-body,
+    so both engines consume bit-identical draws.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree_z)
+    n_leaves = jax.tree_util.tree_leaves(noise)
+    out = []
+    for x, n in zip(leaves, n_leaves):
+        shp = (x.shape[0],) + (1,) * (x.ndim - 1)
+        # barrier the clipped product: the affine has TWO products
+        # feeding one add, and which of them XLA contracts into an FMA
+        # depends on the surrounding program -- eager's merge program and
+        # the scan chunk would round differently whenever clipf != 1.
+        # Fencing x*clipf leaves b*n as the only contraction candidate,
+        # so every context compiles the same fma(b, n, x*clipf).
+        xc = jax.lax.optimization_barrier(
+            x.astype(jnp.float32) * clipf.reshape(shp))
+        y = xc + b.reshape(shp) * n
+        out.append(y.astype(x.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _fused_private(leaves, treedef, key, noise, codec: CodecConfig,
+                   clipf: jax.Array, b: jax.Array):
+    """Dense-quantized Laplace path: ONE fused clip+noise+quantize launch
+    per dtype group (kernels/quant private_quantize_cols)."""
+    m = leaves[0].shape[0]
+    n_leaves = jax.tree_util.tree_leaves(noise)
+    plan = _codec_plan(treedef, leaves, codec)
+    keys = jax.random.split(key, len(plan))
+    out = list(leaves)
+    for gp, gkey in zip(plan, keys):
+        z_rows = _stack_rows([leaves[i] for i in gp.index], gp)
+        # the host-drawn unit noise stacks into the same leaf-major row
+        # layout as the values it perturbs (padding cols get zero noise;
+        # they exit through the fallback select regardless)
+        lap = _stack_rows([n_leaves[i] for i in gp.index], gp)
+        ncols, _ = _group_cols(gp, m)
+        R = len(gp.index) * m
+        cf_r = jnp.tile(clipf, len(gp.index))
+        b_r = jnp.tile(b, len(gp.index))
+        # quantizer range covers the CLIPPED pre-noise magnitudes; noisy
+        # outliers saturate at the grid edge (bounded-output DP). The
+        # scale of a positive row is bit-identical to rowmax(|x * cf|):
+        # multiplying by a nonnegative per-row constant is monotone even
+        # in floating point.
+        scale = jnp.max(jnp.abs(z_rows.astype(jnp.float32)), axis=1) * cf_r
+        u32q = (jax.random.bits(gkey, (R, gp.n_max), dtype=jnp.uint32)
+                if codec.stochastic
+                else jnp.full((R, gp.n_max), 1 << 31, jnp.uint32))
+        out_rows = quant_ops.private_quantize_cols(
+            z_rows, z_rows, cf_r, b_r, scale, ncols, codec.bits, u32q,
+            lap, impl=codec.impl)
+        for i, leaf in zip(gp.index, _unstack_rows(out_rows, gp, m)):
+            out[i] = leaf
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def private_roundtrip(tree_z, tree_fallback, key: jax.Array,
+                      noise, codec: CodecConfig | None, privacy):
+    """Clip + DP-noise + codec round-trip; stacked (m, ...) pytrees.
+
+    What the server receives from each client on the private upload path
+    (docs/privacy.md): the upload is l1-clipped (clip mode) or taken as-is
+    (surrogate mode), perturbed with per-client calibrated noise, then
+    pushed through the ordinary codec. ``noise`` is the unit-noise tree
+    the HOST drew with :func:`draw_unit_noise` from the dedicated privacy
+    key stream (NEVER from the codec key) -- see that docstring for why
+    the draws must enter as data. ``privacy`` is a
+    ``repro.privacy.PrivacyConfig`` or None; with no noise to add (None
+    or eps == 0) this IS ``codec_roundtrip``, bit-for-bit, and ``noise``
+    is untouched (callers pass None).
+
+    The dense quantized Laplace configuration -- the paper's mechanism
+    under the default codec -- runs as ONE fused kernel launch per dtype
+    group (clip + noise + quantize, ``kernels.quant.private_quantize_cols``
+    with its quantizer range set by the clipped PRE-noise magnitudes);
+    every other configuration (sparse top-k, raw bits=0, no codec,
+    gaussian) applies the same clip+noise sequentially and lets the
+    existing codec machinery finish the job.
+    """
+    if privacy is None or privacy.eps <= 0:
+        return codec_roundtrip(tree_z, tree_fallback, key, codec)
+    leaves, treedef = jax.tree_util.tree_flatten(tree_z)
+    m = leaves[0].shape[0]
+    clipf, b = privacy_row_params(_client_l1(leaves, m), privacy)
+    if (codec is not None and codec.bits >= 2 and codec.topk_frac >= 1.0
+            and privacy.mechanism == "laplace"):
+        return _fused_private(leaves, treedef, key, noise, codec, clipf, b)
+    noisy = _clip_noise_tree(tree_z, noise, clipf, b)
+    return codec_roundtrip(noisy, tree_fallback, key, codec)
+
+
+def private_ef_roundtrip(tree_z, tree_h, key: jax.Array, noise,
+                         codec: CodecConfig | None, privacy):
+    """Error-feedback variant: EF compresses the NOISY upload's residual.
+
+    Clip+noise runs sequentially in front (the EF accumulate consumes the
+    residual against the shared memory h, so the fused quantizer -- whose
+    range tracks the raw clipped upload -- does not apply), then
+    ``ef_roundtrip`` proceeds unchanged: the codec memory contracts toward
+    the noisy z, which is exactly the value the mechanism released. With
+    no noise to add this IS ``ef_roundtrip``, bit-for-bit.
+    """
+    if privacy is None or privacy.eps <= 0:
+        return ef_roundtrip(tree_z, tree_h, key, codec)
+    leaves, _ = jax.tree_util.tree_flatten(tree_z)
+    m = leaves[0].shape[0]
+    clipf, b = privacy_row_params(_client_l1(leaves, m), privacy)
+    noisy = _clip_noise_tree(tree_z, noise, clipf, b)
+    return ef_roundtrip(noisy, tree_h, key, codec)

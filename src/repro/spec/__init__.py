@@ -37,6 +37,7 @@ from repro.spec.types import (                         # noqa: F401
     FaultSpec,
     FleetSpec,
     PolicySpec,
+    PrivacySpec,
     SpecError,
     TaskSpec,
     TelemetrySpec,

@@ -88,7 +88,8 @@ def _sim_config(spec: ExperimentSpec) -> SimConfig:
         max_concurrency=default("max_concurrency"),
         deadline_slack=default("deadline_slack"),
         ewma_beta=default("ewma_beta"),
-        faults=_fault_config(spec))
+        faults=_fault_config(spec),
+        privacy=_privacy_config(spec))
 
 
 def _fault_config(spec: ExperimentSpec):
@@ -110,6 +111,24 @@ def _fault_config(spec: ExperimentSpec):
         quarantine_after=fl.quarantine_after,
         quarantine_rounds=fl.quarantine_rounds,
         corrupt_mode=fl.corrupt_mode, seed=seed)
+
+
+def _privacy_config(spec: ExperimentSpec):
+    """[privacy] -> PrivacyConfig, or None when the section is inert (no
+    noise budget and no secure aggregation: the inert spec builds the
+    exact pre-privacy sim, golden-pinned)."""
+    pv = spec.privacy
+    if not (pv.eps > 0 or pv.secure_agg):
+        return None
+    from repro.privacy import PrivacyConfig
+    # the server XORs this with its own privacy tag (0x9D1A) to key the
+    # noise stream, decorrelating it from the arrival and codec RNGs, so
+    # the experiment seed passes through plain here
+    seed = pv.seed if pv.seed is not None else spec.seed
+    return PrivacyConfig(
+        mechanism=pv.mechanism, eps=pv.eps, delta=pv.delta,
+        sensitivity=pv.sensitivity, clip=pv.clip,
+        secure_agg=pv.secure_agg, mask_bytes=pv.mask_bytes, seed=seed)
 
 
 def build(spec: ExperimentSpec) -> "RunHandle":
@@ -324,4 +343,6 @@ class RunHandle:
                  if not mm.abandoned] or [0.0]))
         if sim._faults is not None:
             summary["faults"] = sim._faults.summary()
+        if sim._privacy is not None:
+            summary["privacy"] = sim._privacy.summary()
         return summary

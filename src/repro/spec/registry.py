@@ -520,6 +520,35 @@ def _validate_faults(spec: ExperimentSpec) -> None:
              f"known: {CORRUPT_MODES}")
 
 
+def _validate_privacy(spec: ExperimentSpec) -> None:
+    import math
+
+    from repro.privacy import MECHANISMS, SENSITIVITY_MODES
+    pv = spec.privacy
+    _require(pv.mechanism in MECHANISMS,
+             f"[privacy] unknown mechanism {pv.mechanism!r}; "
+             f"known: {MECHANISMS}")
+    _require(pv.eps >= 0 and math.isfinite(pv.eps),
+             f"[privacy] eps must be a finite value >= 0 "
+             f"(0 = no noise); got {pv.eps}")
+    _require(0.0 < pv.delta < 1.0,
+             f"[privacy] delta must be in (0, 1); got {pv.delta}")
+    _require(pv.sensitivity in SENSITIVITY_MODES,
+             f"[privacy] unknown sensitivity {pv.sensitivity!r}; "
+             f"known: {SENSITIVITY_MODES}")
+    if pv.sensitivity == "clip":
+        _require(pv.clip > 0 and math.isfinite(pv.clip),
+                 "[privacy] sensitivity='clip' requires a finite "
+                 f"clip > 0; got {pv.clip}")
+    else:
+        _require(pv.clip == 0.0,
+                 "[privacy] clip requires sensitivity='clip' (the "
+                 "surrogate mode's sensitivity is 2*||z||_1, never "
+                 f"clipped); got clip={pv.clip}")
+    _require(pv.mask_bytes >= 1,
+             f"[privacy] mask_bytes must be >= 1; got {pv.mask_bytes}")
+
+
 def validate_spec(spec: ExperimentSpec) -> None:
     """Raise SpecError on the first inconsistency found."""
     from repro.spec.types import _SECTIONS
@@ -529,7 +558,7 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _require(isinstance(spec.seed, int) and not isinstance(spec.seed, bool)
              and spec.seed >= 0,
              f"seed must be a non-negative int; got {spec.seed!r}")
-    for sec in ("task", "fleet", "faults"):
+    for sec in ("task", "fleet", "faults", "privacy"):
         sub_seed = getattr(spec, sec).seed
         _require(sub_seed is None or sub_seed >= 0,
                  f"[{sec}] seed must be >= 0 (None = experiment seed); "
@@ -537,7 +566,7 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _require(isinstance(spec.name, str) and spec.name != "",
              f"name must be a non-empty string; got {spec.name!r}")
     for sec in ("task", "algorithm", "fleet", "policy", "codec", "engine",
-                "telemetry", "faults"):
+                "telemetry", "faults", "privacy"):
         for f in dataclasses.fields(getattr(spec, sec)):
             val = getattr(getattr(spec, sec), f.name)
             _require(not isinstance(val, bool) or "bool" in f.type,
@@ -550,3 +579,4 @@ def validate_spec(spec: ExperimentSpec) -> None:
     _validate_engine(spec)
     _validate_telemetry(spec)
     _validate_faults(spec)
+    _validate_privacy(spec)

@@ -229,6 +229,36 @@ class FaultSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PrivacySpec:
+    """Upload privacy (repro.privacy): per-round DP noise on the upload
+    path, a per-client accountant, and secure-aggregation masking.
+
+    ``eps`` is the per-round, per-client budget; ``eps = 0`` disables the
+    clip/noise transform. ``sensitivity`` picks the noise scale's
+    sensitivity source: ``"surrogate"`` uses the paper's data-dependent
+    ``2 * ||z||_1`` (eq. 39), ``"clip"`` enforces ``||z||_1 <= clip``
+    first and then uses the data-independent ``2 * clip`` (``clip`` must
+    be set -- and may ONLY be set -- in clip mode). ``mechanism`` is
+    Laplace (the paper's, Thm V.1) or Gaussian with ``delta``.
+    ``secure_agg`` bills one pairwise-mask exchange of ``mask_bytes``
+    bytes per upload attempt that reaches the wire (billed exactly like
+    the payload bytes: clean arrivals + retries + discarded duplicates).
+    ``seed`` keys the privacy noise stream (None = derived from the
+    experiment seed). The all-default section builds NO privacy state at
+    all -- byte-identical to the pre-privacy simulator, golden-pinned.
+    """
+
+    mechanism: str = "laplace"       # "laplace" | "gaussian"
+    eps: float = 0.0                 # per-round eps budget (0 = no noise)
+    delta: float = 1e-5              # gaussian mechanism delta
+    sensitivity: str = "surrogate"   # "surrogate" | "clip"
+    clip: float = 0.0                # l1 clip bound (sensitivity="clip")
+    secure_agg: bool = False         # pairwise-mask exchange on uploads
+    mask_bytes: int = 32             # bytes per mask-pair exchange
+    seed: int | None = None          # noise-stream seed (None = exp seed)
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineSpec:
     """How rounds execute: engine choice, budget, chunking, termination.
 
@@ -267,6 +297,7 @@ _SECTIONS: dict[str, type] = {
     "engine": EngineSpec,
     "telemetry": TelemetrySpec,
     "faults": FaultSpec,
+    "privacy": PrivacySpec,
 }
 
 
@@ -283,6 +314,7 @@ class ExperimentSpec:
     engine: EngineSpec = EngineSpec()
     telemetry: TelemetrySpec = TelemetrySpec()
     faults: FaultSpec = FaultSpec()
+    privacy: PrivacySpec = PrivacySpec()
     name: str = "experiment"
     seed: int = 0
 

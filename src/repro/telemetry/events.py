@@ -31,6 +31,17 @@ Fault-injection runs (repro.sim.faults, docs/sim.md) add four kinds:
   quarantine        -- a repeat corruption offender was quarantined
                        (attrs carry the release round).
 
+Private-upload runs (repro.privacy, docs/privacy.md) add two kinds:
+
+  privacy_charge -- the DP accountant charged one merged client's
+                    contribution (attrs ``eps`` per round, ``eps_total``
+                    running spend; async merges add ``staleness``). The
+                    per-client budget trajectory is reconstructible from
+                    these events alone (the accountant replay test).
+  mask_exchange  -- secure-aggregation pairwise masks crossed the wire
+                    (attrs ``attempts``, ``bytes``): one event per round,
+                    attempts matching the byte ledger's upload count.
+
 Timestamps are SIMULATED seconds (``FedSim.t``'s clock), not wall time --
 the stream describes what the modeled fleet did, and the eager and scan
 engines reconstruct identical streams for the clocked policies
@@ -50,7 +61,8 @@ from typing import Any, NamedTuple
 
 EVENT_KINDS = ("round_start", "dispatch", "upload_arrival", "merge",
                "abandon", "codec_encode", "ledger_record",
-               "upload_drop", "retry", "duplicate_discard", "quarantine")
+               "upload_drop", "retry", "duplicate_discard", "quarantine",
+               "privacy_charge", "mask_exchange")
 _KIND_SET = frozenset(EVENT_KINDS)
 
 

@@ -17,10 +17,12 @@ summary. Instruments:
 
 Built-in metric names (docs/observability.md has the full table):
 ``rounds``, ``dispatches``, ``uploads``, ``merges``, ``abandoned_rounds``,
-``codec_encodes``, ``codec_bytes``, ``bytes_up``, ``bytes_down``, and --
-under fault injection -- ``upload_drops``, ``retries``,
-``duplicates_discarded``, ``quarantines`` (counters); ``in_flight``,
-``stalled``, ``staleness`` (gauges); ``staleness`` (histogram).
+``codec_encodes``, ``codec_bytes``, ``bytes_up``, ``bytes_down``; under
+fault injection also ``upload_drops``, ``retries``,
+``duplicates_discarded``, ``quarantines``; under a live [privacy] config
+also ``privacy_charges``, ``eps_spent``, ``mask_exchanges``,
+``mask_bytes`` (counters); ``in_flight``, ``stalled``, ``staleness``
+(gauges); ``staleness`` (histogram).
 
 Everything is host-side plain Python -- observing a metric never touches
 jax or the RNG streams.
@@ -139,6 +141,12 @@ class MetricsRegistry:
             self.counter("duplicates_discarded").inc()
         elif kind == "quarantine":
             self.counter("quarantines").inc()
+        elif kind == "privacy_charge":
+            self.counter("privacy_charges").inc()
+            self.counter("eps_spent").inc(attrs.get("eps", 0.0))
+        elif kind == "mask_exchange":
+            self.counter("mask_exchanges").inc(attrs.get("attempts", 0))
+            self.counter("mask_bytes").inc(attrs.get("bytes", 0.0))
         # in-flight occupancy / stalled-FIFO depth ride on dispatch and
         # upload_arrival events under the async event loop
         if "in_flight" in attrs:

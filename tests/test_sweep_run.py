@@ -271,10 +271,11 @@ def test_benchmark_runner_exits_nonzero_but_isolates(monkeypatch, capsys):
 
 
 def test_benchmark_runner_forwards_jobs_uniformly(monkeypatch, capsys):
-    """--jobs reaches EVERY spec-grid module (fig6/fig7/fig8/engine) --
-    the sweep-driver parallelism knob is uniform, not per-module."""
+    """--jobs reaches EVERY spec-grid module (fig6/fig7/fig8/fig9/
+    engine) -- the sweep-driver parallelism knob is uniform, not
+    per-module."""
     from benchmarks import (bench_engine, fig6_stragglers, fig7_async,
-                            fig8_faults)
+                            fig8_faults, fig9_privacy)
     from benchmarks import run as bench_run
 
     seen = {}
@@ -288,12 +289,13 @@ def test_benchmark_runner_forwards_jobs_uniformly(monkeypatch, capsys):
     monkeypatch.setattr(fig6_stragglers, "run", record("fig6"))
     monkeypatch.setattr(fig7_async, "run", record("fig7"))
     monkeypatch.setattr(fig8_faults, "run", record("fig8"))
+    monkeypatch.setattr(fig9_privacy, "run", record("fig9"))
     monkeypatch.setattr(bench_engine, "run", record("engine"))
     rc = bench_run.main(["--quick", "--jobs", "3",
-                         "--only", "fig6,fig7,fig8,engine"])
+                         "--only", "fig6,fig7,fig8,fig9,engine"])
     out = capsys.readouterr().out
     assert rc == 0
-    assert set(seen) == {"fig6", "fig7", "fig8", "engine"}
+    assert set(seen) == {"fig6", "fig7", "fig8", "fig9", "engine"}
     for name, kw in seen.items():
         assert kw.get("jobs") == 3, f"{name} did not receive --jobs"
         assert f"{name}/stub,1.0,ok" in out
@@ -362,3 +364,57 @@ def test_trajectory_append_replaces_in_place(tmp_path, capsys):
     doc = json.loads(out.read_text())
     assert [r["label"] for r in doc["rows"]] == ["pr1", "pr2"]
     assert "async_eager_rounds_per_sec" not in doc["rows"][0]
+
+
+def _fig9_rows(*, fedepm_snr="True", mask=True):
+    rows = [
+        {"name": "fig9/fedepm/snr_increases_with_eps", "value": 0.0,
+         "derived": fedepm_snr},
+        {"name": "fig9/sfedavg/snr_increases_with_eps", "value": 0.0,
+         "derived": "True"},
+        {"name": "fig9/fedepm/cr_stable_in_eps", "value": 0.0,
+         "derived": "True"},
+        {"name": "fig9/sfedavg/cr_stable_in_eps", "value": 0.0,
+         "derived": "True"},
+        {"name": "fig9/fedepm_smallest_SNR", "value": 0.0,
+         "derived": "True"},
+    ]
+    if mask:
+        rows.append({"name": "fig9/fedepm/secure_agg/mask_overhead",
+                     "value": 7680.0, "derived": "mask_attempts=240"})
+    return rows
+
+
+def test_trajectory_fig9_merge(tmp_path):
+    tool = _load_trajectory_tool()
+    ej = tmp_path / "BENCH_engine.json"
+    f9 = tmp_path / "fig9_privacy.json"
+    out = tmp_path / "BENCH_trajectory.json"
+    ej.write_text(json.dumps(_engine_summary()))
+
+    f9.write_text(json.dumps(_fig9_rows()))
+    tool.append(ej, out, "pr1", fig9_json=f9)
+    row = json.loads(out.read_text())["rows"][0]
+    assert row["fig9_snr_increases_with_eps"] is True
+    assert row["fig9_cr_stable_in_eps"] is True
+    assert row["fig9_fedepm_smallest_snr"] is True
+    assert row["fig9_secure_agg_mask_bytes"] == 7680.0
+
+    # per-algorithm claim verdicts are ANDed: one failing algorithm
+    # flips the trajectory field (derived is a stringified bool)
+    f9.write_text(json.dumps(_fig9_rows(fedepm_snr="False")))
+    tool.append(ej, out, "pr1", fig9_json=f9)
+    row = json.loads(out.read_text())["rows"][0]
+    assert row["fig9_snr_increases_with_eps"] is False
+
+    # a missing claim row is a loud error, not a silently absent field
+    f9.write_text(json.dumps(
+        [r for r in _fig9_rows() if "smallest" not in r["name"]]))
+    with pytest.raises(SystemExit, match="fedepm_smallest_SNR"):
+        tool.append(ej, out, "pr1", fig9_json=f9)
+
+    # without --fig9-json the row simply lacks the fields (old history
+    # rows stay valid)
+    tool.append(ej, out, "pr2")
+    row = json.loads(out.read_text())["rows"][1]
+    assert not any(k.startswith("fig9_") for k in row)

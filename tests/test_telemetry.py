@@ -286,7 +286,8 @@ def test_recorder_rejects_unknown_kind():
     assert set(EVENT_KINDS) == {
         "round_start", "dispatch", "upload_arrival", "merge", "abandon",
         "codec_encode", "ledger_record",
-        "upload_drop", "retry", "duplicate_discard", "quarantine"}
+        "upload_drop", "retry", "duplicate_discard", "quarantine",
+        "privacy_charge", "mask_exchange"}
 
 
 # ---------------------------------------------------------------------------

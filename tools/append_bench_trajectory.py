@@ -24,6 +24,15 @@ record/replay scan engine vs the eager event loop) and are omitted from
 rows distilled from pre-async BENCH_engine.json files, so old history
 rows stay valid.
 
+``--fig9-json`` (optional) merges the privacy-frontier distillation from
+a ``benchmarks/fig9_privacy.py --json`` row list into the same labeled
+row: the three claim checks as booleans
+(``fig9_snr_increases_with_eps``, ``fig9_cr_stable_in_eps``,
+``fig9_fedepm_smallest_snr`` -- ANDed over algorithms where both report)
+plus ``fig9_secure_agg_mask_bytes`` (FedEPM secure-agg cell mask bytes).
+Rows written before fig9 existed simply lack the fields, like the
+async_* block.
+
 Rows are keyed by ``label`` (CI passes the PR/branch name); re-running a
 label replaces its row in place, keeping the file one-row-per-PR.
 
@@ -74,7 +83,35 @@ def row_from_engine(summary: dict, label: str) -> dict:
     return row
 
 
-def append(engine_json: Path, out: Path, label: str) -> dict:
+def fields_from_fig9(rows: list) -> dict:
+    """Distill fig9_privacy.py --json rows into trajectory row fields.
+
+    fig9 rows are ``{"name", "value", "derived"}`` where claim rows
+    carry a stringified bool in ``derived``; per-algorithm claims are
+    ANDed so the trajectory records one verdict per claim.
+    """
+    by_name = {r["name"]: r for r in rows}
+
+    def claim(suffix: str) -> bool:
+        hits = [r["derived"] == "True" for n, r in by_name.items()
+                if n.endswith(suffix)]
+        if not hits:
+            raise SystemExit(f"fig9 json has no '*{suffix}' claim row")
+        return all(hits)
+
+    fields = {
+        "fig9_snr_increases_with_eps": claim("/snr_increases_with_eps"),
+        "fig9_cr_stable_in_eps": claim("/cr_stable_in_eps"),
+        "fig9_fedepm_smallest_snr": claim("fedepm_smallest_SNR"),
+    }
+    mask = by_name.get("fig9/fedepm/secure_agg/mask_overhead")
+    if mask is not None:
+        fields["fig9_secure_agg_mask_bytes"] = mask["value"]
+    return fields
+
+
+def append(engine_json: Path, out: Path, label: str,
+           fig9_json: Path | None = None) -> dict:
     """Load, append/replace the labeled row, write back. Returns the doc.
 
     A re-run of an existing label replaces its row IN PLACE (the file
@@ -93,6 +130,8 @@ def append(engine_json: Path, out: Path, label: str) -> dict:
     else:
         doc = {"schema": SCHEMA, "rows": []}
     row = row_from_engine(summary, label)
+    if fig9_json is not None:
+        row.update(fields_from_fig9(json.loads(fig9_json.read_text())))
     rows = doc["rows"]
     at = next((i for i, r in enumerate(rows)
                if r.get("label") == label), None)
@@ -122,8 +161,13 @@ def main(argv=None) -> int:
     ap.add_argument("--label", required=True,
                     help="row key, e.g. the PR number or branch name; "
                          "re-running a label replaces its row")
+    ap.add_argument("--fig9-json", type=Path, default=None,
+                    help="optional fig9_privacy.json row list; merges the "
+                         "privacy claim checks + secure-agg mask bytes "
+                         "into the same labeled row")
     args = ap.parse_args(argv)
-    doc = append(args.engine_json, args.out, args.label)
+    doc = append(args.engine_json, args.out, args.label,
+                 fig9_json=args.fig9_json)
     print(f"{args.out}: {len(doc['rows'])} row(s); "
           f"latest label={args.label}")
     return 0

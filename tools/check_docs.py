@@ -7,9 +7,10 @@ Three checks, all hard failures:
                resolves to an existing file (anchors stripped; http(s) and
                mailto links are out of scope).
 2. DOCSTRINGS -- every Python module under src/repro/sim,
-               src/repro/kernels, src/repro/spec and src/repro/telemetry
-               has a module docstring (the reference-doc entry points of
-               the repo must be self-describing).
+               src/repro/kernels, src/repro/spec, src/repro/telemetry and
+               src/repro/privacy has a module docstring (the
+               reference-doc entry points of the repo must be
+               self-describing).
 3. PAPER MAP -- docs/paper_map.md mentions every paper reference the code
                makes: explicit "eq. (N)" citations, "Algorithm N",
                "Lemma/Setup/Remark/Theorem X.Y", and every
@@ -53,7 +54,7 @@ def check_links() -> list[str]:
 def check_docstrings() -> list[str]:
     errors = []
     for pkg in ("src/repro/sim", "src/repro/kernels", "src/repro/spec",
-                "src/repro/telemetry"):
+                "src/repro/telemetry", "src/repro/privacy"):
         for py in sorted((ROOT / pkg).rglob("*.py")):
             tree = ast.parse(py.read_text())
             if ast.get_docstring(tree) is None:

@@ -56,12 +56,16 @@ PROFILE_SEED = 5
 HEAD = 8  # leading w_tau coordinates pinned
 
 
-def simulate_golden(faults=None) -> dict[str, np.ndarray]:
+def simulate_golden(faults=None, privacy=None) -> dict[str, np.ndarray]:
     """Run the frozen scenario and return the trajectory arrays.
 
     ``faults`` (a repro.sim.faults.FaultConfig or None) exists for the
     zero-rate regression pin: a FaultConfig whose rates are all zero must
-    leave this trajectory bit-for-bit unchanged.
+    leave this trajectory bit-for-bit unchanged. ``privacy`` (a
+    repro.privacy.PrivacyConfig or None) is the same kind of pin for the
+    privacy subsystem: an inert config (eps 0, secure-agg off) must
+    build no privacy state and leave the trajectory bit-for-bit
+    unchanged (tests/test_privacy.py).
     """
     X, y = synth.adult_like(d=D, n=N, seed=SEED)
     batches = jax.tree_util.tree_map(
@@ -72,7 +76,8 @@ def simulate_golden(faults=None) -> dict[str, np.ndarray]:
     s0 = fedepm.init_state(jax.random.PRNGKey(SEED), jnp.zeros(N), cfg)
     sim = FedSim(alg="fedepm", cfg=cfg, state=s0, batches=batches,
                  loss_fn=loss, profiles=make_profiles(M, seed=PROFILE_SEED),
-                 sim=SimConfig(policy="sync", seed=SEED, faults=faults))
+                 sim=SimConfig(policy="sync", seed=SEED, faults=faults,
+                               privacy=privacy))
     objective, t_total, w_head = [], [], []
     for _ in range(ROUNDS):
         m = sim.step()
@@ -94,14 +99,15 @@ ASYNC_ROUNDS = 4      # aggregation events
 ASYNC_CHUNK = 2       # scan engine replays the run as 2 chunks
 
 
-def simulate_golden_async(engine: str = "eager",
-                          faults=None) -> dict[str, np.ndarray]:
+def simulate_golden_async(engine: str = "eager", faults=None,
+                          privacy=None) -> dict[str, np.ndarray]:
     """Run the frozen async scenario -> trajectory arrays.
 
     ``engine`` is "eager" (per-event loop) or "scan" (record/replay in
     ASYNC_CHUNK-event chunks); both must reproduce the SAME stored
-    arrays bit-for-bit (tests/test_sim_invariants.py). ``faults`` exists
-    for the zero-rate regression pin (see ``simulate_golden``).
+    arrays bit-for-bit (tests/test_sim_invariants.py). ``faults`` and
+    ``privacy`` exist for the inert-config regression pins (see
+    ``simulate_golden``).
     """
     X, y = synth.adult_like(d=D, n=N, seed=SEED)
     batches = jax.tree_util.tree_map(
@@ -118,7 +124,7 @@ def simulate_golden_async(engine: str = "eager",
                       seed=SEED, buffer_size=3, max_concurrency=4,
                       codec=CodecConfig(topk_frac=0.5, bits=8,
                                         error_feedback=True),
-                      faults=faults))
+                      faults=faults, privacy=privacy))
     objective, t_total, w_head = [], [], []
 
     def observe(m):
